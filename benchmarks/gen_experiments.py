@@ -1,0 +1,86 @@
+"""Regenerate the dry-run + roofline tables inside EXPERIMENTS.md from
+the sweep JSON artifacts.  Usage:
+
+  PYTHONPATH=src python -m benchmarks.gen_experiments
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.roofline import analyse
+
+MARK_ROOF = "<!-- ROOFLINE_TABLE -->"
+MARK_DRY = "<!-- DRYRUN_TABLES -->"
+
+
+def _fmt_ms(s):
+    return f"{s * 1e3:.2f}"
+
+
+def roofline_md(path: str) -> str:
+    rows = analyse(path)
+    out = ["| arch | shape | peak GiB | t_compute ms | t_memory ms | "
+           "t_collective ms | dominant | roofline frac | useful FLOPs |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | skipped | | | | "
+                       f"{r['skipped'][:48]} | | |")
+            continue
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['peak_gib']:.2f} | "
+            f"{_fmt_ms(r['t_compute_s'])} | {_fmt_ms(r['t_memory_s'])} | "
+            f"{_fmt_ms(r['t_collective_s'])} | {r['dominant']} | "
+            f"{r['roofline_fraction']:.3f} | "
+            f"{r['useful_flops_ratio']:.2f} |")
+    return "\n".join(out)
+
+
+def dryrun_md(path: str, title: str) -> str:
+    with open(path) as f:
+        recs = json.load(f)
+    out = [f"### {title}", "",
+           "| arch | shape | peak GiB/dev | raw HLO GFLOPs/dev | "
+           "collective GiB/dev | lower s | compile s |",
+           "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — skipped: "
+                       f"{r['skipped'][:60]} | | | | |")
+            continue
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR "
+                       f"{r['error'][:60]} | | | | |")
+            continue
+        coll = sum(r.get("collectives", {}).values()) / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{r['memory']['peak_bytes'] / 2**30:.2f} | "
+            f"{r['cost']['flops'] / 1e9:.1f} | {coll:.2f} | "
+            f"{r['lower_s']} | {r['compile_s']} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    roof = roofline_md("dryrun_singlepod.json")
+    dry = (dryrun_md("dryrun_singlepod.json",
+                     "Single-pod 16x16 (256 chips)") + "\n\n" +
+           dryrun_md("dryrun_multipod.json",
+                     "Multi-pod 2x16x16 (512 chips)"))
+    text = text.replace(MARK_ROOF, MARK_ROOF + "\n\n" + roof, 1)
+    text = text.replace(MARK_DRY, MARK_DRY + "\n\n## Appendix: raw "
+                        "dry-run tables\n\n" + dry, 1)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md tables regenerated")
+
+
+if __name__ == "__main__":
+    main()

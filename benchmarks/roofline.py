@@ -1,0 +1,36 @@
+"""Roofline table benchmark: three terms per (arch x shape) from the
+dry-run JSON artifacts (see repro.launch.dryrun / EXPERIMENTS.md)."""
+
+from __future__ import annotations
+
+import os
+
+from repro.roofline import analyse
+
+__all__ = ["run"]
+
+
+def run(print_fn=print, path: str | None = None) -> list[dict]:
+    path = path or os.environ.get("DRYRUN_JSON", "dryrun_singlepod.json")
+    if not os.path.exists(path):
+        print_fn(f"# roofline: {path} missing — run "
+                 "`python -m repro.launch.dryrun --all --out {path}` first")
+        return []
+    rows = analyse(path)
+    print_fn("# Roofline terms per (arch x shape), single-pod 16x16")
+    print_fn("arch,shape,peak_gib,t_compute_ms,t_memory_ms,"
+             "t_collective_ms,dominant,roofline_frac,useful_flops_ratio")
+    for r in rows:
+        if "skipped" in r:
+            print_fn(f"{r['arch']},{r['shape']},skipped({r['skipped'][:40]})"
+                     ",,,,,,")
+            continue
+        if "error" in r:
+            print_fn(f"{r['arch']},{r['shape']},ERROR,,,,,,")
+            continue
+        print_fn(f"{r['arch']},{r['shape']},{r['peak_gib']:.2f},"
+                 f"{r['t_compute_s'] * 1e3:.2f},{r['t_memory_s'] * 1e3:.2f},"
+                 f"{r['t_collective_s'] * 1e3:.2f},{r['dominant']},"
+                 f"{r['roofline_fraction']:.3f},"
+                 f"{r['useful_flops_ratio']:.3f}")
+    return rows

@@ -1,0 +1,25 @@
+"""Benchmark harness — one section per paper table/figure + the TPU
+adaptation studies.  Prints CSV sections; also usable as
+``python -m benchmarks.run``."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    from benchmarks import fig1, roofline, serving, table3
+    table3.run()
+    print()
+    fig1.run()
+    print()
+    serving.run()
+    print()
+    roofline.run()
+    print(f"\n# total benchmark wall time: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Serve a small model with batched requests under three scheduling
+policies (FIFO / symbiotic Algorithm-1 / refined), printing the modelled
+round times and real generated tokens.
+
+The workload is continuous-arrival: new prompts arrive while earlier
+requests are mid-decode, so compute-bound prefill chunks and
+memory-bound decode steps coexist in the queue.  The symbiotic policy
+mixes them within each round — the paper's reordering insight applied
+to TPU serving — so decode steps ride along with prefill's weight
+stream instead of paying for it in separate rounds.
+
+  PYTHONPATH=src python examples/serve_symbiotic.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.tpu import make_serving_device
+from repro.models import transformer as T
+from repro.serve import Request, SchedulerPolicy, ServingEngine
+
+
+def make_arrivals(rng):
+    """Requests arriving over several iterations."""
+    rid = 0
+    arrivals = []
+    for it in range(4):
+        batch = []
+        for _ in range(2):   # long prompts (compute-heavy prefill)
+            batch.append(Request(rid, rng.integers(0, 512, size=256),
+                                 max_new_tokens=4))
+            rid += 1
+        for _ in range(6):   # short prompts -> mostly decode work
+            batch.append(Request(rid, rng.integers(0, 512, size=4),
+                                 max_new_tokens=12))
+            rid += 1
+        arrivals.append((it, batch))
+    return arrivals
+
+
+def main():
+    cfg = get_config("qwen1.5-0.5b", "smoke")
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    # Execution uses the smoke model; the ROUND COST MODEL uses the full
+    # qwen1.5-0.5B parameter count so prefill/decode intensities are
+    # production-realistic.  Tight token budget so composition matters.
+    n_params_full = 464e6
+    device = make_serving_device(token_budget=288,
+                                 hbm_round_budget=float(2 << 30))
+    base = None
+    for policy in ("fifo", "symbiotic", "refined"):
+        rng = np.random.default_rng(0)
+        eng = ServingEngine(cfg, params, max_len=288, device=device,
+                            n_params=n_params_full,
+                            policy=SchedulerPolicy(kind=policy))
+        stats = eng.run(arrivals=make_arrivals(rng))
+        t = stats["modelled_time_s"] * 1e3
+        if base is None:
+            base = t
+        print(f"{policy:10s} rounds={stats['rounds']:3d} "
+              f"new_tokens={stats['total_new_tokens']:3d} "
+              f"modelled_time={t:8.3f} ms "
+              f"speedup_vs_fifo={base / t:5.2f}x")
+    print("\nsample output (req 0):", stats["outputs"][0][:8])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""End-to-end driver: train a ~12M-param qwen-family model for a few
+hundred steps on the synthetic pipeline, with checkpoints + auto-resume.
+
+Loss drops from ~6.2 (ln V) to well below within the run, demonstrating
+the full substrate (data -> model -> loss -> AdamW -> checkpoint).
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_example_ckpt")
+    args = ap.parse_args()
+    out = train("qwen1.5-0.5b", variant="smoke", steps=args.steps,
+                global_batch=8, seq_len=128, ckpt_dir=args.ckpt_dir,
+                ckpt_every=100)
+    print(f"\ntrained {args.steps} steps in {out['seconds']:.0f}s; "
+          f"loss {out['first_loss']:.3f} -> {out['last_loss']:.3f}")
+    assert out["last_loss"] < out["first_loss"], "loss must decrease"
+
+
+if __name__ == "__main__":
+    main()

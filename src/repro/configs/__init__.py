@@ -1,0 +1,7 @@
+"""Architecture registry: 10 assigned archs + shapes + skip plan."""
+
+from .archs import ARCHS, arch_names, get_config
+from .shapes import SHAPES, ShapeSpec, shape_plan
+
+__all__ = ["ARCHS", "arch_names", "get_config", "SHAPES", "ShapeSpec",
+           "shape_plan"]

@@ -1,0 +1,15 @@
+"""Config for ``deepseek-v2-236b`` (assigned architecture).
+
+Exact published hyper-parameters; see ``repro.configs.archs`` for the
+source notes and the reduced smoke variant.
+"""
+
+from .archs import get_config
+
+def full():
+    return get_config("deepseek-v2-236b", "full")
+
+def smoke():
+    return get_config("deepseek-v2-236b", "smoke")
+
+config = full

@@ -1,0 +1,15 @@
+"""Config for ``hubert-xlarge`` (assigned architecture).
+
+Exact published hyper-parameters; see ``repro.configs.archs`` for the
+source notes and the reduced smoke variant.
+"""
+
+from .archs import get_config
+
+def full():
+    return get_config("hubert-xlarge", "full")
+
+def smoke():
+    return get_config("hubert-xlarge", "smoke")
+
+config = full

@@ -1,0 +1,15 @@
+"""Config for ``internlm2-20b`` (assigned architecture).
+
+Exact published hyper-parameters; see ``repro.configs.archs`` for the
+source notes and the reduced smoke variant.
+"""
+
+from .archs import get_config
+
+def full():
+    return get_config("internlm2-20b", "full")
+
+def smoke():
+    return get_config("internlm2-20b", "smoke")
+
+config = full

@@ -1,0 +1,15 @@
+"""Config for ``jamba-v0.1-52b`` (assigned architecture).
+
+Exact published hyper-parameters; see ``repro.configs.archs`` for the
+source notes and the reduced smoke variant.
+"""
+
+from .archs import get_config
+
+def full():
+    return get_config("jamba-v0.1-52b", "full")
+
+def smoke():
+    return get_config("jamba-v0.1-52b", "smoke")
+
+config = full

@@ -1,0 +1,15 @@
+"""Config for ``mixtral-8x7b`` (assigned architecture).
+
+Exact published hyper-parameters; see ``repro.configs.archs`` for the
+source notes and the reduced smoke variant.
+"""
+
+from .archs import get_config
+
+def full():
+    return get_config("mixtral-8x7b", "full")
+
+def smoke():
+    return get_config("mixtral-8x7b", "smoke")
+
+config = full

@@ -1,0 +1,15 @@
+"""Config for ``pixtral-12b`` (assigned architecture).
+
+Exact published hyper-parameters; see ``repro.configs.archs`` for the
+source notes and the reduced smoke variant.
+"""
+
+from .archs import get_config
+
+def full():
+    return get_config("pixtral-12b", "full")
+
+def smoke():
+    return get_config("pixtral-12b", "smoke")
+
+config = full

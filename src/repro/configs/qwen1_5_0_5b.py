@@ -1,0 +1,15 @@
+"""Config for ``qwen1.5-0.5b`` (assigned architecture).
+
+Exact published hyper-parameters; see ``repro.configs.archs`` for the
+source notes and the reduced smoke variant.
+"""
+
+from .archs import get_config
+
+def full():
+    return get_config("qwen1.5-0.5b", "full")
+
+def smoke():
+    return get_config("qwen1.5-0.5b", "smoke")
+
+config = full

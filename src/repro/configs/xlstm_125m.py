@@ -1,0 +1,15 @@
+"""Config for ``xlstm-125m`` (assigned architecture).
+
+Exact published hyper-parameters; see ``repro.configs.archs`` for the
+source notes and the reduced smoke variant.
+"""
+
+from .archs import get_config
+
+def full():
+    return get_config("xlstm-125m", "full")
+
+def smoke():
+    return get_config("xlstm-125m", "smoke")
+
+config = full

@@ -1,0 +1,92 @@
+"""Beyond-paper: simulator-guided local refinement of the launch order.
+
+Algorithm 1 is profile-greedy — it never consults a timing model.  When
+a timing model *is* available at scheduling time (always true for the
+TPU serving/training substrates, where the roofline cost of every task
+is known), the launch order can be polished by local search around the
+greedy solution:
+
+* pairwise swaps,
+* single-kernel reinsertions (remove + insert at every position),
+
+accepting strict improvements until a local optimum or the evaluation
+budget is reached.  The greedy order is both the starting point and the
+fallback, so the refined order is never worse than Algorithm 1's.
+
+This mirrors what the paper's own Fig. 1 suggests: the greedy lands
+above the 90th percentile, and a small neighbourhood search closes most
+of the remaining gap to the optimum at negligible cost (the simulator
+evaluates an 8-kernel order in well under a millisecond, against a
+40,320-point design space).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+from .resources import DeviceModel, KernelProfile
+from .scheduler import Schedule, greedy_order
+from .simulator import simulate
+
+__all__ = ["refine_order", "refined_schedule"]
+
+
+def refine_order(
+    order: Sequence[KernelProfile],
+    device: DeviceModel,
+    *,
+    time_fn: Callable[[Sequence[KernelProfile]], float] | None = None,
+    budget: int = 2000,
+    model: str = "event",
+) -> tuple[list[KernelProfile], float, int]:
+    """Hill-climb ``order`` under ``time_fn``.
+
+    Returns ``(best_order, best_time, evaluations_used)``.
+    """
+    if time_fn is None:
+        time_fn = lambda o: simulate(o, device, model=model)  # noqa: E731
+    best = list(order)
+    best_t = time_fn(best)
+    evals = 1
+    improved = True
+    n = len(best)
+    while improved and evals < budget:
+        improved = False
+        # Pairwise swaps.
+        for i in range(n - 1):
+            for j in range(i + 1, n):
+                if evals >= budget:
+                    break
+                cand = list(best)
+                cand[i], cand[j] = cand[j], cand[i]
+                t = time_fn(cand)
+                evals += 1
+                if t < best_t - 1e-15:
+                    best, best_t, improved = cand, t, True
+        # Reinsertions.
+        for i in range(n):
+            for j in range(n):
+                if i == j or evals >= budget:
+                    continue
+                cand = list(best)
+                k = cand.pop(i)
+                cand.insert(j, k)
+                t = time_fn(cand)
+                evals += 1
+                if t < best_t - 1e-15:
+                    best, best_t, improved = cand, t, True
+    return best, best_t, evals
+
+
+def refined_schedule(
+    kernels: Sequence[KernelProfile],
+    device: DeviceModel,
+    *,
+    budget: int = 2000,
+    model: str = "event",
+) -> tuple[list[KernelProfile], float]:
+    """Algorithm 1 followed by local search.  Returns (order, time)."""
+    sched: Schedule = greedy_order(kernels, device)
+    order, t, _ = refine_order(sched.order, device, budget=budget,
+                               model=model)
+    return order, t

@@ -1,0 +1,5 @@
+"""Data substrate: deterministic synthetic pipeline, bucketing, prefetch."""
+
+from .pipeline import BucketedBatcher, DataConfig, Prefetcher, SyntheticLM
+
+__all__ = ["BucketedBatcher", "DataConfig", "Prefetcher", "SyntheticLM"]

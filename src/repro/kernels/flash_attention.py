@@ -1,0 +1,105 @@
+"""Pallas TPU flash-attention (forward) kernel.
+
+Layout: inputs are head-flattened — q: (BH, S, D), k/v: (BH, T, D)
+(GQA head repetition is resolved in :mod:`repro.kernels.ops`).
+
+Grid: ``(BH, S // block_q)``.  Each program owns one (block_q, D) query
+tile in VMEM and streams K/V tiles of ``block_k`` rows through the MXU
+with the online-softmax recurrence (m, l running statistics in f32).
+Block shapes are MXU-aligned (multiples of 128 on the contracting and
+lane dims; D is padded by ops.py when a model uses head_dim < 128).
+
+Causal and sliding-window masks are applied with iota comparisons on
+the fly — no (S, T) mask tensor ever exists.  For causal programs the
+KV loop stops at the tile covering the query block's last row; for
+sliding windows it also starts at the first in-window tile, so compute
+is O(S·window), matching the XLA twin (``blockwise_sdpa``).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention_bh"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
+            window: int | None, block_q: int, block_k: int, kv_len: int):
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale           # (bq, D)
+    bq, D = q.shape
+    q_start = qi * block_q
+
+    n_kv = kv_len // block_k
+    if causal:
+        # last tile index touching row (q_start + bq - 1)
+        hi = (q_start + bq - 1) // block_k + 1
+    else:
+        hi = n_kv
+    lo = 0
+    if window is not None and causal:
+        lo = jnp.maximum(q_start - window, 0) // block_k
+
+    def body(ki, carry):
+        m_acc, l_acc, o_acc = carry
+        k = k_ref[pl.ds(ki * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.ds(ki * block_k, block_k), :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        q_idx = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0)
+        k_idx = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, block_k), 1)
+        ok = jnp.ones((bq, block_k), jnp.bool_)
+        if causal:
+            ok &= k_idx <= q_idx
+        if window is not None:
+            ok &= k_idx > q_idx - window
+        s = jnp.where(ok, s, _NEG_INF)
+        m_new = jnp.maximum(m_acc, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_acc - m_new)
+        l_new = l_acc * corr + jnp.sum(p, axis=1)
+        o_new = o_acc * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        return m_new, l_new, o_new
+
+    m0 = jnp.full((bq,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    o0 = jnp.zeros((bq, D), jnp.float32)
+    m, l, o = jax.lax.fori_loop(lo, hi, body, (m0, l0, o0))
+    o_ref[...] = (o / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bh(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                       scale: float, causal: bool = True,
+                       window: int | None = None, block_q: int = 128,
+                       block_k: int = 128,
+                       interpret: bool = False) -> jnp.ndarray:
+    """q: (BH, S, D), k/v: (BH, T, D) -> (BH, S, D)."""
+    BH, S, D = q.shape
+    T = k.shape[1]
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    assert S % block_q == 0 and T % block_k == 0, (S, T, block_q, block_k)
+    grid = (BH, S // block_q)
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, kv_len=T)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, D), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((None, T, D), lambda bh, qi: (bh, 0, 0)),
+            pl.BlockSpec((None, T, D), lambda bh, qi: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, D), lambda bh, qi: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

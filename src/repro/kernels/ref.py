@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref", "decode_attention_ref", "rmsnorm_ref",
+           "mamba_scan_ref"]
+
+_NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, scale, causal=True, window=None):
+    """q: (BH, S, D), k/v: (BH, T, D)."""
+    BH, S, D = q.shape
+    T = k.shape[1]
+    s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(T)[None, :]
+    ok = jnp.ones((S, T), bool)
+    if causal:
+        ok &= ki <= qi
+    if window is not None:
+        ok &= ki > qi - window
+    s = jnp.where(ok, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,btd->bsd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lengths, *, scale):
+    """q: (BH, 1, D), k/v: (BH, T, D), lengths: (BH, 1)."""
+    BH, _, D = q.shape
+    T = k.shape[1]
+    s = jnp.einsum("bqd,btd->bqt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    ok = jnp.arange(T)[None, None, :] < lengths[:, :, None]
+    s = jnp.where(ok, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqt,btd->bqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def rmsnorm_ref(x, scale, *, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) *
+            scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def mamba_scan_ref(x, dt, bm, cm, a, d_skip):
+    """x/dt: (B, T, Dc); bm/cm: (B, T, S); a: (Dc, S); d: (Dc,)."""
+    B, T, Dc = x.shape
+    S = bm.shape[-1]
+
+    def one(xb, dtb, bb, cb):
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            dA = jnp.exp(dtt[:, None] * a.astype(jnp.float32))
+            dBx = (dtt * xt)[:, None] * bt[None, :]
+            h = h * dA + dBx
+            y = jnp.sum(h * ct[None, :], axis=1) + \
+                d_skip.astype(jnp.float32) * xt
+            return h, y
+
+        h0 = jnp.zeros((Dc, S), jnp.float32)
+        _, ys = jax.lax.scan(step, h0, (xb.astype(jnp.float32),
+                                        dtb.astype(jnp.float32),
+                                        bb.astype(jnp.float32),
+                                        cb.astype(jnp.float32)))
+        return ys
+
+    out = jax.vmap(one)(x, dt, bm, cm)
+    return out.astype(x.dtype)

@@ -1,0 +1,44 @@
+"""Pallas TPU fused RMSNorm kernel.
+
+x: (R, D) rows; one pass: mean-of-squares reduction + rsqrt + scale in
+VMEM, f32 accumulation regardless of input dtype.  Grid tiles rows in
+``block_r`` chunks; D stays whole per program (lane-dim aligned).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["rmsnorm_rows"]
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)                    # (br, D)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + eps)
+    o_ref[...] = (y * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm_rows(x: jnp.ndarray, scale: jnp.ndarray, *, eps: float = 1e-6,
+                 block_r: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """x: (R, D), scale: (D,) -> (R, D)."""
+    R, D = x.shape
+    block_r = min(block_r, R)
+    while R % block_r:
+        block_r //= 2
+    kernel = functools.partial(_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(R // block_r,),
+        in_specs=[
+            pl.BlockSpec((block_r, D), lambda r: (r, 0)),
+            pl.BlockSpec((D,), lambda r: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_r, D), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, D), x.dtype),
+        interpret=interpret,
+    )(x, scale)

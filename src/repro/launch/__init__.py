@@ -1,0 +1,5 @@
+"""Launchers: mesh construction, dry-run, train/serve drivers."""
+
+from .mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_host_mesh", "make_production_mesh"]

@@ -1,0 +1,70 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+Nothing here allocates: params/opt-state shapes come from
+``jax.eval_shape`` over the real initialisers, inputs are synthesized
+per the assigned shape table.  ``[audio]``/``[vlm]`` archs receive
+precomputed frame/patch embeddings (the modality frontend is a stub).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeSpec
+from repro.models import transformer as T
+from repro.models.common import ModelConfig
+from repro.optim.adamw import adamw_init
+
+__all__ = ["input_specs", "state_specs", "cache_shape"]
+
+Sds = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, spec: ShapeSpec) -> dict[str, Any]:
+    """Model inputs for one cell, as ShapeDtypeStructs."""
+    B, S = spec.global_batch, spec.seq_len
+    if spec.kind in ("train", "prefill"):
+        if cfg.input_mode == "tokens":
+            inputs = Sds((B, S), jnp.int32)
+        else:
+            inputs = Sds((B, S, cfg.d_model), jnp.bfloat16)
+        out = {"inputs": inputs}
+        if spec.kind == "train":
+            out["labels"] = Sds((B, S), jnp.int32)
+        return out
+    # decode: one new token against a cache of S tokens.
+    if cfg.input_mode == "tokens":
+        tok = Sds((B,), jnp.int32)
+    else:
+        tok = Sds((B, 1, cfg.d_model), jnp.bfloat16)
+    return {"tok": tok, "pos": Sds((), jnp.int32)}
+
+
+def state_specs(cfg: ModelConfig, *, with_opt: bool = True,
+                opt_dtype=jnp.float32,
+                param_dtype=None) -> dict[str, Any]:
+    """abstract params (+ optimizer state) via eval_shape — no allocation.
+
+    ``param_dtype=jnp.bfloat16`` models inference deployments (resident
+    bf16 weights)."""
+    params = jax.eval_shape(
+        lambda: T.init(jax.random.PRNGKey(0), cfg))
+    if param_dtype is not None:
+        params = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(
+                l.shape, param_dtype if l.dtype == jnp.float32 else l.dtype),
+            params)
+    out = {"params": params}
+    if with_opt:
+        out["opt_state"] = jax.eval_shape(
+            lambda p: adamw_init(p, opt_dtype), params)
+    return out
+
+
+def cache_shape(cfg: ModelConfig, spec: ShapeSpec) -> Any:
+    """Abstract KV/state cache sized for the cell's context length."""
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, spec.global_batch, spec.seq_len))

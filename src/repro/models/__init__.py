@@ -1,0 +1,10 @@
+"""Model zoo: pure-JAX pytree models covering all assigned families."""
+
+from .common import ModelConfig
+from . import transformer
+from .transformer import (count_params, decode_step, forward, init,
+                          init_cache, model_flops, prefill, unit_period)
+
+__all__ = ["ModelConfig", "transformer", "count_params", "decode_step",
+           "forward", "init", "init_cache", "model_flops", "prefill",
+           "unit_period"]

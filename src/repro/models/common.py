@@ -1,0 +1,192 @@
+"""Shared model config, initialisers and elementary layers (pure JAX).
+
+No flax/haiku: parameters are plain nested dicts of ``jnp.ndarray``;
+every layer is an ``init(key, ...) -> params`` / ``apply(params, x)``
+pair.  Sharding is assigned separately by path rules
+(:mod:`repro.dist.sharding`), keeping model code mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ModelConfig", "Dense", "rmsnorm", "layernorm", "norm",
+           "init_norm", "act_fn", "rope_tables", "apply_rope",
+           "make_dense", "dense", "PyTree"]
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One config object covers all ten assigned architectures."""
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+
+    # --- attention ---
+    attn_type: str = "gqa"          # "gqa" | "mla"
+    qkv_bias: bool = False
+    causal: bool = True
+    sliding_window: int | None = None
+    rope_theta: float = 10_000.0
+    use_rope: bool = True
+
+    # --- MLA (deepseek-v2) ---
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_rope_head_dim: int = 64
+    qk_nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0
+    moe_layer_period: int = 1        # MoE every k-th layer
+    first_dense_layers: int = 0      # leading dense layers (deepseek)
+    capacity_factor: float = 1.25
+
+    # --- block pattern, cycled over layers ---
+    block_pattern: tuple[str, ...] = ("attn",)   # attn|mamba|mlstm|slstm
+
+    # --- mamba ---
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+    mamba_dt_rank: int = 0           # 0 => ceil(d_model/16)
+
+    # --- xlstm ---
+    xlstm_proj_factor: float = 2.0
+
+    # --- misc ---
+    act: str = "swiglu"              # "swiglu" | "gelu"
+    norm: str = "rmsnorm"            # "rmsnorm" | "layernorm"
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    input_mode: str = "tokens"       # "tokens" | "embeddings" (stub frontend)
+    logit_softcap: float = 0.0
+
+    # ------------------------------------------------------------------
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def mamba_d_inner(self) -> int:
+        return self.mamba_expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return self.mamba_dt_rank or -(-self.d_model // 16)
+
+    def layer_kind(self, i: int) -> str:
+        return self.block_pattern[i % len(self.block_pattern)]
+
+    def is_moe_layer(self, i: int) -> bool:
+        if self.n_experts == 0 or i < self.first_dense_layers:
+            return False
+        return (i - self.first_dense_layers + 1) % self.moe_layer_period == 0
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Elementary layers
+# ---------------------------------------------------------------------------
+
+def make_dense(key, d_in: int, d_out: int, *, bias: bool = False,
+               scale: float | None = None, dtype=jnp.float32) -> PyTree:
+    scale = 1.0 / math.sqrt(d_in) if scale is None else scale
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: PyTree, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+Dense = (make_dense, dense)  # convenience export
+
+
+def init_norm(d: int, kind: str) -> PyTree:
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def rmsnorm(p: PyTree, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * p["scale"]).astype(dt)
+
+
+def layernorm(p: PyTree, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p.get("bias", 0.0)).astype(dt)
+
+
+def norm(p: PyTree, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    return rmsnorm(p, x) if kind == "rmsnorm" else layernorm(p, x)
+
+
+def act_fn(kind: str):
+    if kind == "gelu":
+        return jax.nn.gelu
+    if kind == "silu":
+        return jax.nn.silu
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_tables(positions: jnp.ndarray, head_dim: int,
+                theta: float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables for the given positions; shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray,
+               sin: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs (x0, x1) = (even, odd) channels.  x: (..., S, H, D)."""
+    dt = x.dtype
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    # cos/sin: (..., S, D/2) -> broadcast over the head axis.
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.astype(dt)

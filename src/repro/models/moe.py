@@ -1,0 +1,378 @@
+"""Mixture-of-Experts with capacity-based, sort-free static dispatch.
+
+Design constraints:
+
+* static shapes only (jit/pjit friendly): per-expert buffers of
+  ``capacity`` slots, overflow tokens dropped (standard Switch/GShard
+  semantics, capacity_factor controls the drop rate),
+* no O(T*E*C) one-hot tensors: slot indices are computed with a sort
+  over token-expert assignments and a segment-relative ranking, then
+  tokens are gathered into an (E, C, d) buffer — the Megablocks-style
+  grouped-GEMM layout that XLA SPMD shards cleanly,
+* experts are sharded over the "model" mesh axis when ``E`` divides it
+  (expert parallelism, e.g. deepseek 160/16); otherwise each expert's
+  ``d_ff`` is sharded (tensor parallelism inside experts, e.g. mixtral
+  8 experts on a 16-way axis),
+* router computed in f32 with load-balance + z losses (returned as
+  aux so the train step can weight them).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, PyTree, make_dense
+
+__all__ = ["MoE"]
+
+
+def _expert_ffn(p: PyTree, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    """Grouped SwiGLU/GELU ffn over (E, C, d) buffers."""
+    wg, wu, wd = (p["w_gate"].astype(x.dtype), p["w_up"].astype(x.dtype),
+                  p["w_down"].astype(x.dtype))
+    if act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, wg)) * \
+            jnp.einsum("ecd,edf->ecf", x, wu)
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", x, wg))
+    return jnp.einsum("ecf,efd->ecd", h, wd)
+
+
+class MoE:
+    @staticmethod
+    def init(key, cfg: ModelConfig) -> PyTree:
+        d, E, ff = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+        ks = iter(jax.random.split(key, 8))
+        s_in = 1.0 / math.sqrt(d)
+        s_out = 1.0 / math.sqrt(ff * 2 * cfg.n_layers)
+        p = {
+            "router": make_dense(next(ks), d, E, scale=s_in),
+            "experts": {
+                "w_gate": jax.random.normal(next(ks), (E, d, ff)) * s_in,
+                "w_up": jax.random.normal(next(ks), (E, d, ff)) * s_in,
+                "w_down": jax.random.normal(next(ks), (E, ff, d)) * s_out,
+            },
+        }
+        if cfg.n_shared_experts:
+            ff_sh = ff * cfg.n_shared_experts
+            p["shared"] = {
+                "w_gate": make_dense(next(ks), d, ff_sh, scale=s_in),
+                "w_up": make_dense(next(ks), d, ff_sh, scale=s_in),
+                "w_down": make_dense(next(ks), ff_sh, d, scale=s_out),
+            }
+        return p
+
+    @staticmethod
+    def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+        c = int(math.ceil(n_tokens * cfg.top_k * cfg.capacity_factor
+                          / cfg.n_experts))
+        return max(8, -(-c // 8) * 8)  # pad to multiple of 8
+
+    @staticmethod
+    def fwd(p: PyTree, cfg: ModelConfig, x: jnp.ndarray
+            ) -> tuple[jnp.ndarray, dict]:
+        """x: (B, S, d) -> (y, aux_losses).
+
+        Dispatches to the distributed path when a tensor/expert-parallel
+        mesh axis is installed (see :mod:`repro.dist.context`):
+
+        * ``E % tp == 0``: expert parallelism — local routing, fixed-
+          capacity all_to_all to expert shards, grouped GEMM, reverse
+          all_to_all (the Switch/GShard schedule, explicit via
+          shard_map so SPMD can never replicate token buffers),
+        * otherwise: experts replicated over tokens, each shard computes
+          a d_ff slice of every expert and psums (tensor parallelism
+          inside experts).
+        """
+        from repro.dist import context as dctx
+        tp = dctx.tp_size()
+        if tp > 1 and dctx.mesh() is not None:
+            if cfg.n_experts % tp == 0:
+                return MoE._fwd_ep(p, cfg, x)
+            return MoE._fwd_tp(p, cfg, x)
+        return MoE._fwd_local(p, cfg, x)
+
+    @staticmethod
+    def _fwd_local(p: PyTree, cfg: ModelConfig, x: jnp.ndarray
+                   ) -> tuple[jnp.ndarray, dict]:
+        B, S, d = x.shape
+        E, K = cfg.n_experts, cfg.top_k
+        T = B * S
+        xt = x.reshape(T, d)
+        C = MoE.capacity(cfg, T)
+
+        logits = (xt.astype(jnp.float32)
+                  @ p["router"]["w"].astype(jnp.float32))      # (T, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, expert_ids = jax.lax.top_k(probs, K)        # (T, K)
+        gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+        # ---- slot assignment without (T, E) one-hots ------------------
+        flat_e = expert_ids.reshape(-1)                        # (T*K,)
+        # Priority: earlier tokens win capacity (GShard semantics).
+        order = jnp.argsort(flat_e, stable=True)               # group by expert
+        sorted_e = flat_e[order]
+        # rank within expert group = index - start(expert)
+        counts = jnp.bincount(sorted_e, length=E)              # (E,)
+        starts = jnp.cumsum(counts) - counts
+        ranks_sorted = jnp.arange(T * K) - starts[sorted_e]
+        ranks = jnp.zeros_like(ranks_sorted).at[order].set(ranks_sorted)
+        keep = ranks < C                                       # (T*K,)
+
+        slot = flat_e * C + jnp.where(keep, ranks, 0)          # (T*K,)
+        token_idx = jnp.repeat(jnp.arange(T), K)
+        # Scatter tokens into the (E*C, d) buffer (dropped -> slot 0 masked).
+        buf = jnp.zeros((E * C, d), x.dtype)
+        contrib = jnp.where(keep[:, None], xt[token_idx], 0.0)
+        buf = buf.at[slot].add(contrib, mode="drop")
+        buf = buf.reshape(E, C, d)
+
+        y_buf = _expert_ffn(p["experts"], buf, cfg.act)        # (E, C, d)
+
+        # Combine: gather each kept assignment's output and weight by gate.
+        y_flat = y_buf.reshape(E * C, d)[slot]                 # (T*K, d)
+        w = jnp.where(keep, gate_vals.reshape(-1), 0.0).astype(x.dtype)
+        y = jnp.zeros((T, d), x.dtype).at[token_idx].add(y_flat * w[:, None])
+
+        if "shared" in p:
+            from .common import dense
+            sh = p["shared"]
+            if cfg.act == "swiglu":
+                h = jax.nn.silu(dense(sh["w_gate"], xt)) * dense(sh["w_up"], xt)
+            else:
+                h = jax.nn.gelu(dense(sh["w_gate"], xt))
+            y = y + dense(sh["w_down"], h)
+
+        # ---- aux losses ----------------------------------------------
+        me = jnp.mean(probs, axis=0)                           # (E,)
+        ce = jnp.mean(
+            (jnp.bincount(flat_e, length=E) / (T * K)).astype(jnp.float32))
+        frac = jnp.bincount(flat_e, length=E).astype(jnp.float32) / (T * K)
+        lb_loss = E * jnp.sum(frac * me)
+        z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+        aux = {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss,
+               "moe_drop_frac": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+        return y.reshape(B, S, d), aux
+
+    # ------------------------------------------------------------------
+    # Distributed paths (explicit shard_map — SPMD alone mis-shards the
+    # dispatch scatter and replicates token buffers).
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _route_local(p, cfg, xt, capacity):
+        """Shared routing: top-k, capacity ranks.  xt: (t, d) local."""
+        E, K = cfg.n_experts, cfg.top_k
+        t = xt.shape[0]
+        logits = xt.astype(jnp.float32) @ p["router"]["w"].astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, expert_ids = jax.lax.top_k(probs, K)
+        gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+        flat_e = expert_ids.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        counts = jnp.bincount(sorted_e, length=E)
+        starts = jnp.cumsum(counts) - counts
+        ranks_sorted = jnp.arange(t * K) - starts[sorted_e]
+        ranks = jnp.zeros_like(ranks_sorted).at[order].set(ranks_sorted)
+        keep = ranks < capacity
+        return logits, probs, gate_vals, flat_e, ranks, keep
+
+    @staticmethod
+    def _aux_of(cfg, logits, probs, flat_e, keep, axes):
+        E, K = cfg.n_experts, cfg.top_k
+        t = probs.shape[0]
+
+        def mean_over(v):
+            if axes:
+                return jax.lax.pmean(v, axes)
+            return v
+
+        me = mean_over(jnp.mean(probs, axis=0))
+        frac = mean_over(
+            jnp.bincount(flat_e, length=E).astype(jnp.float32) / (t * K))
+        lb = E * jnp.sum(frac * me)
+        z = mean_over(jnp.mean(jnp.square(jax.nn.logsumexp(logits, -1))))
+        drop = mean_over(1.0 - jnp.mean(keep.astype(jnp.float32)))
+        return {"moe_lb_loss": lb, "moe_z_loss": z, "moe_drop_frac": drop}
+
+    @staticmethod
+    def _shared_tp(p, cfg, xt, tp_axis):
+        """Shared experts with d_ff tensor-parallel over ``tp_axis``."""
+        if "shared" not in p:
+            return 0.0
+        sh = p["shared"]
+        wg = sh["w_gate"]["w"].astype(xt.dtype)
+        wu = sh["w_up"]["w"].astype(xt.dtype)
+        wd = sh["w_down"]["w"].astype(xt.dtype)
+        if cfg.act == "swiglu":
+            h = jax.nn.silu(xt @ wg) * (xt @ wu)
+        else:
+            h = jax.nn.gelu(xt @ wg)
+        y = h @ wd
+        return jax.lax.psum(y, tp_axis) if tp_axis else y
+
+    @staticmethod
+    def _fwd_ep(p: PyTree, cfg: ModelConfig, x: jnp.ndarray
+                ) -> tuple[jnp.ndarray, dict]:
+        """Expert parallelism: tokens split over (dp, tp); fixed-capacity
+        all_to_all dispatch to expert shards; reverse combine."""
+        from jax.sharding import PartitionSpec as P
+        from repro.dist import context as dctx
+
+        mesh = dctx.mesh()
+        dp_ax, tp_ax = dctx.activation_axes()
+        dp_axes = tuple(dp_ax) if isinstance(dp_ax, (tuple, list)) else (
+            (dp_ax,) if dp_ax else ())
+        B, S, d = x.shape
+        E, K = cfg.n_experts, cfg.top_k
+        m = dctx.tp_size()
+        E_loc = E // m
+        T = B * S
+
+        # Token sharding must stay aligned with the outer (B, S, d)
+        # activation layout or the backward respec replicates the full
+        # batch: batch over the DP axes (when divisible) and *sequence*
+        # over the model axis (sequence-parallel dispatch).  Remaining
+        # replication (tiny decode batches) is correct — each source
+        # shard combines only its own slots — at the cost of duplicate
+        # routing compute.
+        b_axes: tuple = ()
+        n_b = 1
+        for a in dp_axes:
+            sz = mesh.shape[a]
+            if B % (n_b * sz) == 0:
+                b_axes += (a,)
+                n_b *= sz
+        s_ax = tp_ax if S % m == 0 else None
+        n_tok_shards = n_b * (m if s_ax else 1)
+        t_loc = T // n_tok_shards
+        c_se = max(4, -(-int(t_loc * K * cfg.capacity_factor / E) // 4) * 4)
+
+        def inner(xb, router_w, wg, wu, wd, shared):
+            xt = xb.reshape(-1, d)
+            pl = {"router": {"w": router_w},
+                  "shared": shared} if shared is not None else {
+                      "router": {"w": router_w}}
+            logits, probs, gates, flat_e, ranks, keep = MoE._route_local(
+                pl, cfg, xt, c_se)
+            t = xt.shape[0]
+            dest = flat_e // E_loc
+            eslot = flat_e % E_loc
+            slot = dest * (E_loc * c_se) + eslot * c_se + \
+                jnp.where(keep, ranks, 0)
+            token_idx = jnp.repeat(jnp.arange(t), K)
+            contrib = jnp.where(keep[:, None], xt[token_idx], 0.0)
+            send = jnp.zeros((m * E_loc * c_se, d), xt.dtype)
+            send = send.at[slot].add(contrib, mode="drop")
+            send = send.reshape(m, E_loc * c_se, d)
+            recv = jax.lax.all_to_all(send, tp_ax, split_axis=0,
+                                      concat_axis=0, tiled=False)
+            buf = recv.reshape(m, E_loc, c_se, d).transpose(1, 0, 2, 3)
+            buf = buf.reshape(E_loc, m * c_se, d)
+            y_buf = _expert_ffn({"w_gate": wg, "w_up": wu, "w_down": wd},
+                                buf, cfg.act)
+            back = y_buf.reshape(E_loc, m, c_se, d).transpose(1, 0, 2, 3)
+            back = back.reshape(m, E_loc * c_se, d)
+            ret = jax.lax.all_to_all(back, tp_ax, split_axis=0,
+                                     concat_axis=0, tiled=False)
+            y_flat = ret.reshape(m * E_loc * c_se, d)[slot]
+            w = jnp.where(keep, gates.reshape(-1), 0.0).astype(xt.dtype)
+            y = jnp.zeros((t, d), xt.dtype).at[token_idx].add(
+                y_flat * w[:, None])
+            y = y + MoE._shared_tp(pl, cfg, xt, None)
+            aux_axes = b_axes + ((s_ax,) if s_ax else ())
+            aux = MoE._aux_of(cfg, logits, probs, flat_e, keep, aux_axes)
+            return y.reshape(xb.shape), aux
+
+        shared = p.get("shared")
+        shared_spec = None
+        if shared is not None:
+            shared_spec = jax.tree.map(lambda _: P(None, None), shared)
+        tok_spec = P(b_axes if b_axes else None, s_ax, None)
+        y, aux = jax.shard_map(
+            inner, mesh=mesh,
+            in_specs=(tok_spec, P(None, None),
+                      P(tp_ax, None, None), P(tp_ax, None, None),
+                      P(tp_ax, None, None), shared_spec),
+            out_specs=(tok_spec,
+                       {k: P() for k in ("moe_lb_loss", "moe_z_loss",
+                                         "moe_drop_frac")}),
+            check_vma=False,
+        )(x, p["router"]["w"], p["experts"]["w_gate"],
+          p["experts"]["w_up"], p["experts"]["w_down"], shared)
+        return y, aux
+
+    @staticmethod
+    def _fwd_tp(p: PyTree, cfg: ModelConfig, x: jnp.ndarray
+                ) -> tuple[jnp.ndarray, dict]:
+        """Experts too few to shard: replicate routing, shard every
+        expert's d_ff over the model axis, psum the combined output."""
+        from jax.sharding import PartitionSpec as P
+        from repro.dist import context as dctx
+
+        mesh = dctx.mesh()
+        dp_ax, tp_ax = dctx.activation_axes()
+        dp_axes = tuple(dp_ax) if isinstance(dp_ax, (tuple, list)) else (
+            (dp_ax,) if dp_ax else ())
+        B, S, d = x.shape
+        E, K = cfg.n_experts, cfg.top_k
+        T = B * S
+        tok_axes: tuple = ()
+        n_dp = 1
+        for a in dp_axes:
+            sz = mesh.shape[a]
+            if T % (n_dp * sz) == 0:
+                tok_axes += (a,)
+                n_dp *= sz
+        dp_axes = tok_axes
+        t_loc = T // n_dp
+        C = max(8, -(-int(t_loc * K * cfg.capacity_factor / E) // 8) * 8)
+
+        def inner(xt, router_w, wg, wu, wd, shared):
+            pl = {"router": {"w": router_w}}
+            if shared is not None:
+                pl["shared"] = shared
+            logits, probs, gates, flat_e, ranks, keep = MoE._route_local(
+                pl, cfg, xt, C)
+            t = xt.shape[0]
+            slot = flat_e * C + jnp.where(keep, ranks, 0)
+            token_idx = jnp.repeat(jnp.arange(t), K)
+            contrib = jnp.where(keep[:, None], xt[token_idx], 0.0)
+            buf = jnp.zeros((E * C, d), xt.dtype)
+            buf = buf.at[slot].add(contrib, mode="drop").reshape(E, C, d)
+            y_buf = _expert_ffn({"w_gate": wg, "w_up": wu, "w_down": wd},
+                                buf, cfg.act)
+            y_flat = y_buf.reshape(E * C, d)[slot]
+            w = jnp.where(keep, gates.reshape(-1), 0.0).astype(xt.dtype)
+            y = jnp.zeros((t, d), xt.dtype).at[token_idx].add(
+                y_flat * w[:, None])
+            y = jax.lax.psum(y, tp_ax)
+            y = y + MoE._shared_tp(pl, cfg, xt, tp_ax)
+            aux = MoE._aux_of(cfg, logits, probs, flat_e, keep, dp_axes)
+            return y, aux
+
+        xt = x.reshape(T, d)
+        shared = p.get("shared")
+        shared_spec = None
+        if shared is not None:
+            shared_spec = {
+                "w_gate": {"w": P(None, tp_ax)},
+                "w_up": {"w": P(None, tp_ax)},
+                "w_down": {"w": P(tp_ax, None)},
+            }
+        y, aux = jax.shard_map(
+            inner, mesh=mesh,
+            in_specs=(P(dp_axes if dp_axes else None, None), P(None, None),
+                      P(None, None, tp_ax), P(None, None, tp_ax),
+                      P(None, tp_ax, None), shared_spec),
+            out_specs=(P(dp_axes if dp_axes else None, None),
+                       {k: P() for k in ("moe_lb_loss", "moe_z_loss",
+                                         "moe_drop_frac")}),
+            check_vma=False,
+        )(xt, p["router"]["w"], p["experts"]["w_gate"],
+          p["experts"]["w_up"], p["experts"]["w_down"], shared)
+        return y.reshape(B, S, d), aux

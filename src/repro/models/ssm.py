@@ -1,0 +1,151 @@
+"""Mamba-1 selective-state-space block (for jamba-v0.1).
+
+Faithful structure: in-proj to (x, z), depthwise causal conv, selective
+(input-dependent) Δ/B/C, diagonal A, gated out-proj.  The scan runs in
+fixed-size chunks with ``jax.lax.scan`` carrying only the (B, d_inner,
+d_state) state — states are never materialised over the sequence, and
+the chunk bodies are remat-friendly.  Decode keeps (conv window, ssm
+state) as the cache: constant memory per sequence, which is what makes
+SSM decode work items such good symbiotic partners for prefill in the
+serving scheduler.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, PyTree, make_dense, dense
+
+__all__ = ["Mamba"]
+
+
+class Mamba:
+    @staticmethod
+    def init(key, cfg: ModelConfig) -> PyTree:
+        d, di, ds = cfg.d_model, cfg.mamba_d_inner, cfg.mamba_d_state
+        dtr, dc = cfg.dt_rank, cfg.mamba_d_conv
+        ks = iter(jax.random.split(key, 8))
+        # S4D-real initialisation for A.
+        a = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :],
+                     (di, 1))
+        dt_init = jnp.exp(
+            jax.random.uniform(next(ks), (di,)) *
+            (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+        inv_softplus = lambda x: jnp.log(jnp.expm1(x))  # noqa: E731
+        return {
+            "w_in": make_dense(next(ks), d, 2 * di),
+            "conv_w": jax.random.normal(next(ks), (dc, di)) / math.sqrt(dc),
+            "conv_b": jnp.zeros((di,)),
+            "w_x_dbc": make_dense(next(ks), di, dtr + 2 * ds),
+            "w_dt": make_dense(next(ks), dtr, di, scale=dtr ** -0.5),
+            "dt_bias": inv_softplus(dt_init),
+            "a_log": jnp.log(a),
+            "d_skip": jnp.ones((di,)),
+            "w_out": make_dense(next(ks), di, d,
+                                scale=1.0 / math.sqrt(di * 2 * cfg.n_layers)),
+        }
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _dbc(p, cfg, xc):
+        """xc: (..., di) -> dt (..., di), Bm (..., ds), Cm (..., ds)."""
+        dtr, ds = cfg.dt_rank, cfg.mamba_d_state
+        dbc = dense(p["w_x_dbc"], xc)
+        dt = jax.nn.softplus(
+            dense(p["w_dt"], dbc[..., :dtr]) +
+            p["dt_bias"].astype(xc.dtype))
+        Bm = dbc[..., dtr:dtr + ds]
+        Cm = dbc[..., dtr + ds:]
+        return dt, Bm, Cm
+
+    @staticmethod
+    def fwd(p: PyTree, cfg: ModelConfig, x: jnp.ndarray,
+            chunk: int = 128) -> jnp.ndarray:
+        """x: (B, S, d) -> (B, S, d).
+
+        Two-level scan: an outer ``lax.scan`` over chunks carries only
+        the (B, di, ds) state at chunk boundaries, and the remat'd
+        inner scan recomputes within-chunk states during backward — the
+        memory shape of Mamba's hardware-aware formulation.
+        """
+        B, S, d = x.shape
+        di, ds, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+        xz = dense(p["w_in"], x)
+        xi, z = jnp.split(xz, 2, axis=-1)                      # (B,S,di)
+        # Depthwise causal conv along S.
+        pad = jnp.pad(xi, ((0, 0), (dc - 1, 0), (0, 0)))
+        conv = sum(pad[:, i:i + S, :] * p["conv_w"][i].astype(x.dtype)
+                   for i in range(dc))
+        xc = jax.nn.silu(conv + p["conv_b"].astype(x.dtype))
+        dt, Bm, Cm = Mamba._dbc(p, cfg, xc)
+        A = -jnp.exp(p["a_log"])                               # (di, ds)
+
+        def step(h, inp):
+            xc_t, dt_t, B_t, C_t = inp                         # (B,di),(B,di),(B,ds),(B,ds)
+            dA = jnp.exp(dt_t[..., None] * A)                  # (B,di,ds)
+            dBx = dt_t[..., None] * B_t[:, None, :] * xc_t[..., None]
+            h = h * dA + dBx
+            y = jnp.einsum("bds,bs->bd", h, C_t)
+            return h, y
+
+        ck = min(chunk, S)
+        n_chunks = -(-S // ck)
+        Sp = n_chunks * ck
+
+        def to_chunks(a):
+            a = a.astype(jnp.float32).swapaxes(0, 1)           # (S, B, ...)
+            if Sp != S:
+                a = jnp.pad(a, ((0, Sp - S),) + ((0, 0),) * (a.ndim - 1))
+            return a.reshape(n_chunks, ck, *a.shape[1:])
+
+        seq = tuple(to_chunks(a) for a in (xc, dt, Bm, Cm))
+
+        @jax.checkpoint
+        def chunk_body(h, inp):
+            return jax.lax.scan(step, h, inp)
+
+        h0 = jnp.zeros((B, di, ds), jnp.float32)
+        _, ys = jax.lax.scan(chunk_body, h0, seq)              # (n, ck, B, di)
+        y = ys.reshape(Sp, B, di)[:S].swapaxes(0, 1).astype(x.dtype)
+        y = y + xc * p["d_skip"].astype(x.dtype)
+        y = y * jax.nn.silu(z)
+        return dense(p["w_out"], y)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> PyTree:
+        di, ds, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+        return {
+            "conv": jnp.zeros((batch, dc - 1, di), dtype),
+            "ssm": jnp.zeros((batch, di, ds), jnp.float32),
+        }
+
+    @staticmethod
+    def decode(p: PyTree, cfg: ModelConfig, x: jnp.ndarray, cache: PyTree,
+               pos: jnp.ndarray) -> tuple[jnp.ndarray, PyTree]:
+        """x: (B, 1, d) one token."""
+        B = x.shape[0]
+        di, ds, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+        xz = dense(p["w_in"], x)[:, 0]                         # (B, 2di)
+        xi, z = jnp.split(xz, 2, axis=-1)
+        window = jnp.concatenate(
+            [cache["conv"].astype(x.dtype), xi[:, None, :]], axis=1)  # (B,dc,di)
+        conv = jnp.einsum("bcd,cd->bd", window, p["conv_w"].astype(x.dtype))
+        xc = jax.nn.silu(conv + p["conv_b"].astype(x.dtype))
+        dt, Bm, Cm = Mamba._dbc(p, cfg, xc)
+        A = -jnp.exp(p["a_log"])
+        dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A)
+        dBx = (dt.astype(jnp.float32)[..., None] *
+               Bm.astype(jnp.float32)[:, None, :] *
+               xc.astype(jnp.float32)[..., None])
+        h = cache["ssm"] * dA + dBx
+        y = jnp.einsum("bds,bs->bd", h, Cm.astype(jnp.float32)).astype(x.dtype)
+        y = y + xc * p["d_skip"].astype(x.dtype)
+        y = y * jax.nn.silu(z)
+        out = dense(p["w_out"], y)[:, None, :]
+        return out, {"conv": window[:, 1:].astype(cache["conv"].dtype),
+                     "ssm": h}

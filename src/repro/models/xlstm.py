@@ -1,0 +1,273 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM and sLSTM.
+
+* ``MLSTM`` — matrix-memory LSTM with exponential gating.  Training and
+  prefill use the *parallel* (attention-like) form with the stabilised
+  log-gate decay matrix; decode uses the recurrent form with a
+  (B, H, dv, dk) matrix state — constant memory per sequence, which is
+  why ``xlstm-125m`` runs the ``long_500k`` cell natively.
+* ``SLSTM`` — scalar-memory LSTM with exponential gating and head-wise
+  block-diagonal recurrence.  Inherently sequential: a chunk-remat'd
+  ``lax.scan`` over time.
+
+Both follow the paper's pre-up-projection block layout (no separate FF:
+``d_ff = 0`` in the config).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, PyTree, dense, make_dense
+
+__all__ = ["MLSTM", "SLSTM"]
+
+
+def _proj_dims(cfg: ModelConfig) -> tuple[int, int]:
+    di = int(cfg.d_model * cfg.xlstm_proj_factor)
+    di = -(-di // cfg.n_heads) * cfg.n_heads
+    return di, di // cfg.n_heads
+
+
+class MLSTM:
+    @staticmethod
+    def init(key, cfg: ModelConfig) -> PyTree:
+        d = cfg.d_model
+        di, hd = _proj_dims(cfg)
+        ks = iter(jax.random.split(key, 8))
+        return {
+            "w_up": make_dense(next(ks), d, 2 * di),
+            "wq": make_dense(next(ks), di, di),
+            "wk": make_dense(next(ks), di, di),
+            "wv": make_dense(next(ks), di, di),
+            "w_if": make_dense(next(ks), di, 2 * cfg.n_heads, bias=True),
+            "ln_scale": jnp.ones((di,), jnp.float32),
+            "w_down": make_dense(next(ks), di, d,
+                                 scale=1.0 / math.sqrt(di * 2 * cfg.n_layers)),
+        }
+
+    @staticmethod
+    def _qkv_gates(p, cfg, xu):
+        B, S, di = xu.shape
+        H = cfg.n_heads
+        hd = di // H
+        q = dense(p["wq"], xu).reshape(B, S, H, hd)
+        k = dense(p["wk"], xu).reshape(B, S, H, hd) / math.sqrt(hd)
+        v = dense(p["wv"], xu).reshape(B, S, H, hd)
+        gates = dense(p["w_if"], xu).astype(jnp.float32)       # (B,S,2H)
+        i_pre, f_pre = gates[..., :H], gates[..., H:]
+        return q, k, v, i_pre, f_pre
+
+    @staticmethod
+    def fwd(p: PyTree, cfg: ModelConfig, x: jnp.ndarray,
+            chunk: int = 256) -> jnp.ndarray:
+        """Chunkwise-parallel form: O(S * chunk) memory, O(S * (chunk +
+        d_head)) time per head — the TPU-native mLSTM formulation.
+
+        Within a chunk the quadratic stabilised decay matrix is used;
+        across chunks a (C, n, m) state identical to the decode
+        recurrence is carried, so this matches decode token-for-token.
+        """
+        B, S, d = x.shape
+        H = cfg.n_heads
+        xu, z = jnp.split(dense(p["w_up"], x), 2, axis=-1)
+        q, k, v, i_pre, f_pre = MLSTM._qkv_gates(p, cfg, xu)
+        hd = q.shape[-1]
+
+        ck = min(chunk, S)
+        while S % ck:
+            ck //= 2
+        n_chunks = S // ck
+
+        def to_chunks(a):
+            return a.reshape(B, n_chunks, ck, *a.shape[2:]).swapaxes(0, 1)
+
+        qs, ks, vs = map(to_chunks, (q, k, v))
+        is_, fs = map(to_chunks, (i_pre, f_pre))                # (n,B,ck,H)
+
+        @jax.checkpoint
+        def chunk_body(carry, inp):
+            C_a, n_a, m_a = carry      # (B,H,hd,hd), (B,H,hd), (B,H)
+            qb, kb, vb, ib, fb = inp   # (B,ck,...)
+            logf = jax.nn.log_sigmoid(fb.astype(jnp.float32))   # (B,ck,H)
+            F = jnp.cumsum(logf, axis=1)                        # (B,ck,H)
+            # Row stabiliser: m_t = F_t + max(m_a, cummax_s(i_s - F_s))
+            g = jnp.maximum.accumulate(ib - F, axis=1)          # cummax
+            m_t = F + jnp.maximum(m_a[:, None, :], g)           # (B,ck,H)
+            # Inter-chunk contribution (state carries scale exp(m_a)).
+            w_inter = jnp.exp(m_a[:, None, :] + F - m_t)        # (B,ck,H)
+            qf = qb.astype(jnp.float32)
+            num_inter = jnp.einsum("bshd,bhvd->bshv", qf, C_a) * \
+                w_inter[..., None]
+            den_inter = jnp.einsum("bshd,bhd->bsh", qf, n_a) * w_inter
+            # Intra-chunk attention with stabilised decay matrix.
+            Dlog = (F[:, :, None, :] - F[:, None, :, :] +
+                    ib[:, None, :, :].astype(jnp.float32))      # (B,s,t,H)
+            tri = jnp.tril(jnp.ones((ck, ck), bool))
+            Dlog = jnp.where(tri[None, :, :, None], Dlog, -jnp.inf)
+            Dw = jnp.exp(Dlog - m_t[:, :, None, :])
+            logits = jnp.einsum("bshd,bthd->bsth", qf,
+                                kb.astype(jnp.float32))
+            w = logits * Dw
+            num = num_inter + jnp.einsum("bsth,bthd->bshd", w,
+                                         vb.astype(jnp.float32))
+            den = den_inter + jnp.sum(w, axis=2)
+            h = num / jnp.maximum(jnp.abs(den),
+                                  jnp.exp(-m_t))[..., None]     # (B,ck,H,hd)
+            # End-of-chunk state (same convention as decode()).
+            F_L = F[:, -1:, :]                                  # (B,1,H)
+            m_b = (F_L + jnp.maximum(m_a[:, None, :], g[:, -1:, :]))[:, 0]
+            sc_old = jnp.exp(m_a + F_L[:, 0] - m_b)             # (B,H)
+            w_new = jnp.exp(F_L - F + ib - m_b[:, None, :])     # (B,ck,H)
+            kf, vf = kb.astype(jnp.float32), vb.astype(jnp.float32)
+            C_b = C_a * sc_old[..., None, None] + jnp.einsum(
+                "bsh,bshv,bshk->bhvk", w_new, vf, kf)
+            n_b = n_a * sc_old[..., None] + jnp.einsum(
+                "bsh,bshk->bhk", w_new, kf)
+            return (C_b, n_b, m_b), h
+
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+        _, hs = jax.lax.scan(chunk_body, (C0, n0, m0),
+                             (qs, ks, vs, is_, fs))             # (n,B,ck,H,hd)
+        h = hs.swapaxes(0, 1).reshape(B, S, H, hd)
+        # Per-head "group norm" (layernorm over head dim), then gate.
+        mu = jnp.mean(h, -1, keepdims=True)
+        var = jnp.var(h, -1, keepdims=True)
+        h = ((h - mu) * jax.lax.rsqrt(var + 1e-6)).reshape(B, S, -1)
+        h = (h * p["ln_scale"]).astype(x.dtype)
+        h = h * jax.nn.silu(z)
+        return dense(p["w_down"], h)
+
+    # -- decode --------------------------------------------------------
+    @staticmethod
+    def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> PyTree:
+        di, hd = _proj_dims(cfg)
+        H = cfg.n_heads
+        return {
+            "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32),
+        }
+
+    @staticmethod
+    def decode(p: PyTree, cfg: ModelConfig, x: jnp.ndarray, cache: PyTree,
+               pos: jnp.ndarray) -> tuple[jnp.ndarray, PyTree]:
+        B = x.shape[0]
+        H = cfg.n_heads
+        xu, z = jnp.split(dense(p["w_up"], x), 2, axis=-1)
+        q, k, v, i_pre, f_pre = MLSTM._qkv_gates(p, cfg, xu)
+        q, k, v = q[:, 0], k[:, 0], v[:, 0]                    # (B,H,hd)
+        i_pre, f_pre = i_pre[:, 0], f_pre[:, 0]                # (B,H)
+        logf = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(logf + cache["m"], i_pre)
+        f_sc = jnp.exp(logf + cache["m"] - m_new)[..., None]
+        i_sc = jnp.exp(i_pre - m_new)[..., None]
+        kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+        C = cache["C"] * f_sc[..., None] + \
+            i_sc[..., None] * vf[..., :, None] * kf[..., None, :]
+        n = cache["n"] * f_sc + i_sc * kf
+        qf = q.astype(jnp.float32)
+        num = jnp.einsum("bhvk,bhk->bhv", C, qf)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)),
+                          jnp.exp(-m_new))[..., None]
+        h = num / den                                          # (B,H,hd)
+        mu = jnp.mean(h, -1, keepdims=True)
+        var = jnp.var(h, -1, keepdims=True)
+        h = ((h - mu) * jax.lax.rsqrt(var + 1e-6)).reshape(B, 1, -1)
+        h = (h * p["ln_scale"]).astype(x.dtype)
+        h = h * jax.nn.silu(z)
+        return dense(p["w_down"], h), {"C": C, "n": n, "m": m_new}
+
+
+class SLSTM:
+    @staticmethod
+    def init(key, cfg: ModelConfig) -> PyTree:
+        d = cfg.d_model
+        H = cfg.n_heads
+        hd = d // H
+        ks = iter(jax.random.split(key, 6))
+        # 4 gates (i, f, z, o), input + block-diagonal recurrent weights.
+        return {
+            "w_x": make_dense(next(ks), d, 4 * d, bias=True),
+            "r": jax.random.normal(next(ks), (4, H, hd, hd)) / math.sqrt(hd),
+            "ln_scale": jnp.ones((d,), jnp.float32),
+            "w_up": make_dense(next(ks), d, int(d * 4 / 3) * 2),
+            "w_down": make_dense(next(ks), int(d * 4 / 3), d,
+                                 scale=1.0 / math.sqrt(d * 2 * cfg.n_layers)),
+        }
+
+    @staticmethod
+    def _step(p, cfg, carry, wx_t):
+        """carry: (c, n, h, m) each (B, H, hd); wx_t: (B, 4d)."""
+        c, n, h, m = carry
+        B = h.shape[0]
+        H = cfg.n_heads
+        hd = h.shape[-1]
+        rw = p["r"]  # (4, H, hd, hd)
+        rec = jnp.einsum("bhk,ghkv->gbhv", h, rw)              # (4,B,H,hd)
+        pre = wx_t.reshape(B, 4, H, hd).transpose(1, 0, 2, 3) + rec
+        i_pre, f_pre, z_pre, o_pre = pre[0], pre[1], pre[2], pre[3]
+        logf = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(logf + m, i_pre)
+        i_g = jnp.exp(i_pre - m_new)
+        f_g = jnp.exp(logf + m - m_new)
+        c_new = f_g * c + i_g * jnp.tanh(z_pre)
+        n_new = f_g * n + i_g
+        h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    @staticmethod
+    def fwd(p: PyTree, cfg: ModelConfig, x: jnp.ndarray,
+            chunk: int = 64) -> jnp.ndarray:
+        B, S, d = x.shape
+        H = cfg.n_heads
+        hd = d // H
+        wx = dense(p["w_x"], x).astype(jnp.float32)            # (B,S,4d)
+        ck = min(chunk, S)
+        n_chunks = -(-S // ck)
+        Sp = n_chunks * ck
+        seq = wx.swapaxes(0, 1)
+        if Sp != S:
+            seq = jnp.pad(seq, ((0, Sp - S), (0, 0), (0, 0)))
+        seq = seq.reshape(n_chunks, ck, B, 4 * d)
+
+        @jax.checkpoint
+        def chunk_body(carry, inp):
+            return jax.lax.scan(
+                lambda c, t: SLSTM._step(p, cfg, c, t), carry, inp)
+
+        z0 = jnp.zeros((B, H, hd), jnp.float32)
+        carry0 = (z0, z0, z0, jnp.full((B, H, hd), -1e30, jnp.float32))
+        _, hs = jax.lax.scan(chunk_body, carry0, seq)          # (n,ck,B,H,hd)
+        h = hs.reshape(Sp, B, d)[:S].swapaxes(0, 1)
+        h = (h * p["ln_scale"]).astype(x.dtype)
+        # Post-up-projection FF (proj factor 4/3, GeGLU).
+        u, g = jnp.split(dense(p["w_up"], h), 2, axis=-1)
+        return dense(p["w_down"], u * jax.nn.gelu(g))
+
+    # -- decode --------------------------------------------------------
+    @staticmethod
+    def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> PyTree:
+        H = cfg.n_heads
+        hd = cfg.d_model // H
+        z = jnp.zeros((batch, H, hd), jnp.float32)
+        return {"c": z, "n": z, "h": z,
+                "m": jnp.full((batch, H, hd), -1e30, jnp.float32)}
+
+    @staticmethod
+    def decode(p: PyTree, cfg: ModelConfig, x: jnp.ndarray, cache: PyTree,
+               pos: jnp.ndarray) -> tuple[jnp.ndarray, PyTree]:
+        wx = dense(p["w_x"], x).astype(jnp.float32)[:, 0]      # (B,4d)
+        carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+        (c, n, h, m), h_out = SLSTM._step(p, cfg, carry, wx)
+        B = x.shape[0]
+        hflat = (h_out.reshape(B, 1, -1) * p["ln_scale"]).astype(x.dtype)
+        u, g = jnp.split(dense(p["w_up"], hflat), 2, axis=-1)
+        y = dense(p["w_down"], u * jax.nn.gelu(g))
+        return y, {"c": c, "n": n, "h": h, "m": m}

@@ -1,0 +1,7 @@
+"""Roofline analysis from dry-run artifacts + analytic cost model."""
+
+from .analysis import HW, analyse, load_records, model_flops, roofline_row
+from .flops import cell_bytes, cell_flops
+
+__all__ = ["HW", "analyse", "load_records", "model_flops", "roofline_row",
+           "cell_bytes", "cell_flops"]

@@ -1,0 +1,5 @@
+"""Serving substrate: KV-cache engine + symbiotic round scheduler."""
+
+from .engine import Request, SchedulerPolicy, ServingEngine
+
+__all__ = ["Request", "SchedulerPolicy", "ServingEngine"]

@@ -1,0 +1,147 @@
+"""Loss and train-step builders (pjit-ready pure functions)."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.common import ModelConfig
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["cross_entropy", "loss_fn", "make_train_step", "make_eval_step",
+           "init_train_state"]
+
+PyTree = Any
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  ignore_id: int = -1) -> jnp.ndarray:
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(lp, labels[..., None].astype(jnp.int32),
+                             axis=-1)[..., 0]
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def chunked_cross_entropy(x: jnp.ndarray, head_w: jnp.ndarray,
+                          labels: jnp.ndarray, *, n_chunks: int = 0,
+                          ignore_id: int = -1) -> jnp.ndarray:
+    """CE over (B,S,d) features without materialising (B*S, V) logits.
+
+    Tokens are processed in ``n_chunks`` scanned, remat'd chunks — peak
+    memory is one chunk of logits; backward recomputes each chunk.
+    ``n_chunks=0`` sizes chunks to ~64k global tokens.
+    """
+    B, S, d = x.shape
+    T_ = B * S
+    if n_chunks <= 0:
+        n_chunks = max(1, T_ // 65536)
+    n_chunks = min(n_chunks, T_)
+    while T_ % n_chunks:
+        n_chunks -= 1
+    xf = x.reshape(n_chunks, T_ // n_chunks, d)
+    lf = labels.reshape(n_chunks, T_ // n_chunks)
+
+    @jax.checkpoint
+    def chunk(carry, inp):
+        xc, lc = inp
+        logits = (xc @ head_w.astype(xc.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, lc[:, None].astype(jnp.int32), axis=-1)[:, 0]
+        mask = (lc != ignore_id).astype(jnp.float32)
+        num, den = carry
+        return (num + jnp.sum((lse - ll) * mask), den + jnp.sum(mask)), None
+
+    (num, den), _ = jax.lax.scan(chunk, (jnp.float32(0), jnp.float32(0)),
+                                 (xf, lf))
+    return num / jnp.maximum(den, 1.0)
+
+
+def cast_matmul_params(params: PyTree, dtype=jnp.bfloat16) -> PyTree:
+    """Mixed precision: one bf16 copy of every >=2-D f32 weight, made
+    ONCE per step before the layer loop.  FSDP all-gathers and gradient
+    reduce-scatters then move bf16 instead of f32 — half the collective
+    bytes (measured in EXPERIMENTS.md §Perf).  1-D leaves (norms,
+    biases, gates) stay f32; the f32 master copy lives in the optimizer
+    update path."""
+    def cast(p):
+        if p.dtype == jnp.float32 and p.ndim >= 2:
+            return p.astype(dtype)
+        return p
+
+    return jax.tree.map(cast, params)
+
+
+def loss_fn(params: PyTree, cfg: ModelConfig, batch: dict,
+            *, lb_weight: float = 0.01, z_weight: float = 1e-3,
+            remat: bool = True, loss_chunks: int = 0,
+            unroll: bool = False,
+            mixed_precision: bool = True) -> tuple[jnp.ndarray, dict]:
+    if mixed_precision:
+        params = cast_matmul_params(params)
+    feats, aux = T.forward_features(params, cfg, batch["inputs"],
+                                    remat=remat, unroll=unroll)
+    ce = chunked_cross_entropy(feats, T.head_matrix(params, cfg),
+                               batch["labels"], n_chunks=loss_chunks)
+    loss = ce + lb_weight * aux["moe_lb_loss"] + z_weight * aux["moe_z_loss"]
+    metrics = {"loss": loss, "ce": ce, **aux}
+    return loss, metrics
+
+
+def init_train_state(key, cfg: ModelConfig) -> tuple[PyTree, PyTree]:
+    params = T.init(key, cfg)
+    return params, adamw_init(params)
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig, *,
+                    accum: int = 1, remat: bool = True,
+                    unroll: bool = False):
+    """Returns ``step(params, opt_state, batch) -> (params, opt_state,
+    metrics)``.  With ``accum > 1`` the batch's leading dim is split
+    into microbatches and gradients are accumulated in f32 (scanned, so
+    the lowered HLO stays one microbatch wide)."""
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, batch, remat=remat,
+                                   unroll=unroll)
+        return grads, metrics
+
+    def step(params, opt_state, batch):
+        if accum == 1:
+            grads, metrics = grads_of(params, batch)
+        else:
+            def split(x):
+                return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                g, m = grads_of(params, mb)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return acc, m
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, ms = jax.lax.scan(body, zeros, micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            metrics = jax.tree.map(lambda x: jnp.mean(x, axis=0), ms)
+        params, opt_state, opt_metrics = adamw_update(
+            opt, params, grads, opt_state)
+        return params, opt_state, {**metrics, **opt_metrics}
+
+    return step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def step(params, batch):
+        _, metrics = loss_fn(params, cfg, batch, remat=False)
+        return metrics
+
+    return step

@@ -1,0 +1,128 @@
+"""Hypothesis property tests for the paper's core invariants."""
+
+import math
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import (GTX580, DeviceModel, KernelProfile, greedy_order,
+                        pair_score, profile_combine, simulate)
+from repro.core.refine import refined_schedule
+from repro.core.scorer import combined_ratio, fits_together
+
+
+def kernel_strategy(name_idx: int = 0):
+    return st.builds(
+        lambda g, b, r, s, inst: KernelProfile(
+            name=f"k{name_idx}-{g}-{b}-{s}",
+            n_blocks=g,
+            demands={"shm": float(s), "reg": float(20 * b), "warp": b / 32},
+            inst_per_block=inst,
+            r=r),
+        st.sampled_from([16, 32, 48, 64, 96]),
+        st.sampled_from([64, 128, 256, 512]),
+        st.floats(min_value=0.5, max_value=30.0),
+        st.sampled_from([0, 4096, 8192, 16384, 24576]),
+        st.floats(min_value=1e6, max_value=5e8),
+    )
+
+
+def kernels_strategy(n_min=2, n_max=7):
+    return st.lists(kernel_strategy(), min_size=n_min, max_size=n_max,
+                    unique_by=lambda k: k.name)
+
+
+@given(kernels_strategy())
+@settings(max_examples=60, deadline=None)
+def test_schedule_is_permutation(kernels):
+    """Every kernel appears exactly once in the greedy schedule."""
+    sched = greedy_order(kernels, GTX580)
+    assert sorted(k.name for k in sched.order) == \
+        sorted(k.name for k in kernels)
+
+
+@given(kernels_strategy())
+@settings(max_examples=60, deadline=None)
+def test_rounds_sorted_by_shm(kernels):
+    """Within each round kernels are in decreasing shm order (paper
+    line 6/10)."""
+    sched = greedy_order(kernels, GTX580)
+    for rd in sched.rounds:
+        shms = [k.per_unit_demand(GTX580).get("shm", 0.0)
+                for k in rd.kernels]
+        assert shms == sorted(shms, reverse=True)
+
+
+@given(kernels_strategy(2, 6))
+@settings(max_examples=40, deadline=None)
+def test_refined_never_worse_than_greedy(kernels):
+    sched = greedy_order(kernels, GTX580)
+    t_greedy = simulate(sched.order, GTX580)
+    _, t_ref = refined_schedule(kernels, GTX580, budget=300)
+    assert t_ref <= t_greedy + 1e-12
+
+
+@given(kernel_strategy(0), kernel_strategy(1))
+@settings(max_examples=60, deadline=None)
+def test_pair_score_symmetric_nonnegative(a, b):
+    s_ab = pair_score(a, b, GTX580)
+    s_ba = pair_score(b, a, GTX580)
+    assert s_ab >= 0.0
+    assert math.isclose(s_ab, s_ba, rel_tol=1e-9, abs_tol=1e-12)
+
+
+@given(kernel_strategy(0), kernel_strategy(1))
+@settings(max_examples=60, deadline=None)
+def test_unfit_pairs_score_zero(a, b):
+    if not fits_together(a, b, GTX580):
+        assert pair_score(a, b, GTX580) == 0.0
+
+
+@given(kernel_strategy(0), kernel_strategy(1))
+@settings(max_examples=60, deadline=None)
+def test_profile_combine_conserves(a, b):
+    """ProfileCombine: demands add (per unit), work adds, ratio is the
+    block-weighted mean (between min and max)."""
+    c = profile_combine(a, b, GTX580)
+    da, db = a.per_unit_demand(GTX580), b.per_unit_demand(GTX580)
+    dc = c.per_unit_demand(GTX580)
+    for dim in da:
+        assert math.isclose(dc[dim], da[dim] + db[dim], rel_tol=1e-9)
+    assert math.isclose(c.inst_per_block,
+                        a.inst_per_block + b.inst_per_block, rel_tol=1e-9)
+    assert min(a.r, b.r) - 1e-9 <= c.r <= max(a.r, b.r) + 1e-9
+    assert math.isclose(c.r, combined_ratio(a, b), rel_tol=1e-9)
+
+
+@given(kernels_strategy(2, 6))
+@settings(max_examples=30, deadline=None)
+def test_simulator_time_positive_and_bounded(kernels):
+    """Total time is at least the roofline lower bound of the whole
+    workload and at most the sum of standalone times (work conserving
+    vs fully serial), up to occupancy effects on the upper side."""
+    t = simulate(kernels, GTX580)
+    dev = GTX580
+    total_c = sum(k.inst_per_block * k.n_blocks for k in kernels) \
+        / dev.n_units
+    total_m = sum(k.mem_per_block() * k.n_blocks for k in kernels) \
+        / dev.n_units
+    lower = max(total_c / dev.compute_rate, total_m / dev.mem_bw)
+    assert t >= lower * 0.99
+    serial = sum(simulate([k], dev) for k in kernels)
+    # Not strictly work-conserving: the common-rate coupling plus an
+    # under-occupied tail round can exceed the serial sum slightly
+    # (never by more than the occupancy penalty bound).
+    assert t <= serial * 1.5
+
+
+@given(kernels_strategy(2, 5), st.randoms())
+@settings(max_examples=30, deadline=None)
+def test_simulator_order_invariant_total_work(kernels, rnd):
+    """Shuffling the order never changes total executed work — only
+    time; and every order terminates."""
+    import random
+    p = list(kernels)
+    rnd.shuffle(p)
+    t1 = simulate(kernels, GTX580)
+    t2 = simulate(p, GTX580)
+    assert t1 > 0 and t2 > 0
