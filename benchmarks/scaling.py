@@ -1,0 +1,161 @@
+"""Schedule-construction scaling: reference vs vectorized paths.
+
+For n in {8, 32, 128, 512, 1024} kernels, on two workload mixes
+(GTX580 kernel soup; TPU serving prefill+decode items), measures
+
+* wall time of schedule construction — greedy + default-budget refine
+  (200 evaluations, the serving default) — for the pure-Python
+  reference path vs the vectorized/incremental fast path, and
+* the modelled execution time of the produced order under both the
+  round model (the refine objective) and the event simulator,
+
+and emits ``BENCH_scheduler_scaling.json`` for the perf trajectory.
+The reference path is O(R * n^2) Python-level ScoreGen reruns and is
+skipped above ``--max-ref-n`` (default 512, ~35 s there); pass
+``--full`` to run it everywhere.
+
+Run:  PYTHONPATH=src python benchmarks/scaling.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import random
+import time
+
+from repro.core import (GTX580, RoundSimulator, greedy_order,
+                        greedy_order_fast, simulate)
+from repro.core.refine import refine_order
+from repro.core.resources import (KernelProfile, bs_kernel, ep_kernel,
+                                  es_kernel, sw_kernel)
+from repro.core.tpu import decode_profile, make_serving_device, prefill_profile
+
+REFINE_BUDGET = 200
+NS = (8, 32, 128, 512, 1024)
+_FAMS = [ep_kernel, bs_kernel, es_kernel, sw_kernel]
+
+
+def gpu_mix(rng: random.Random, n: int) -> list[KernelProfile]:
+    return [rng.choice(_FAMS)(f"k{i}",
+                              grid=rng.choice([8, 16, 32, 48, 64, 96]),
+                              shm=rng.choice([0, 4096, 8192, 16384, 24576]),
+                              inst=rng.uniform(1e6, 5e8))
+            for i in range(n)]
+
+
+def tpu_mix(rng: random.Random, n: int) -> list[KernelProfile]:
+    out = []
+    for i in range(n):
+        if rng.random() < 0.3:
+            it = prefill_profile(f"p{i}", n_params=7e9,
+                                 seq_len=rng.choice([128, 256, 512, 1024]),
+                                 kv_bytes_per_token=131072)
+        else:
+            it = decode_profile(f"d{i}", n_params=7e9,
+                                kv_len=rng.randint(64, 8192),
+                                kv_bytes_per_token=131072)
+        out.append(it.profile())
+    return out
+
+
+SCENARIOS = (
+    ("gpu_mix", GTX580, gpu_mix),
+    ("tpu_serving", make_serving_device(), tpu_mix),
+)
+
+
+def construct(ks, device, path: str) -> dict:
+    """Greedy + default-budget refine; returns wall time + quality."""
+    t0 = time.perf_counter()
+    if path == "reference":
+        sched = greedy_order(ks, device)
+        sim = RoundSimulator(device)
+        order, t_round, evals = refine_order(
+            sched.order, device, time_fn=sim.simulate,
+            budget=REFINE_BUDGET)
+    else:
+        sched = greedy_order_fast(ks, device)
+        order, t_round, evals = refine_order(
+            sched.order, device, model="round", budget=REFINE_BUDGET,
+            neighborhood="auto")
+    wall = time.perf_counter() - t0
+    return {
+        "path": path,
+        "wall_s": wall,
+        "rounds": len(sched.rounds),
+        "refine_evals": evals,
+        "modelled_round_time_s": t_round,
+        "modelled_event_time_s": simulate(order, device),
+    }
+
+
+def run(max_ref_n: int = 512, seed: int = 0,
+        print_fn=print) -> dict:
+    results = []
+    print_fn("# Scheduler scaling: reference vs vectorized "
+             f"(refine budget {REFINE_BUDGET})")
+    print_fn("scenario,n,path,wall_s,round_time_s,event_time_s,speedup")
+    for name, device, maker in SCENARIOS:
+        for n in NS:
+            rng = random.Random(seed)
+            ks = maker(rng, n)
+            fast = construct(ks, device, "fast")
+            ref = None
+            if n <= max_ref_n:
+                ref = construct(ks, device, "reference")
+            for rec in filter(None, (ref, fast)):
+                speedup = (ref["wall_s"] / fast["wall_s"]
+                           if ref is not None and rec is fast else "")
+                print_fn(f"{name},{n},{rec['path']},"
+                         f"{rec['wall_s']:.4f},"
+                         f"{rec['modelled_round_time_s']:.5f},"
+                         f"{rec['modelled_event_time_s']:.5f},"
+                         f"{speedup if speedup == '' else f'{speedup:.1f}'}")
+                results.append({"scenario": name, "n": n, **rec})
+    summary = _summary(results)
+    out = {"benchmark": "scheduler_scaling",
+           "refine_budget": REFINE_BUDGET,
+           "ns": list(NS), "max_ref_n": max_ref_n,
+           "results": results, "summary": summary}
+    print_fn(f"summary: {json.dumps(summary)}")
+    return out
+
+
+def _summary(results: list[dict]) -> dict:
+    by = {(r["scenario"], r["n"], r["path"]): r for r in results}
+    speedups = {}
+    quality_ok = True
+    for (scen, n, path), r in by.items():
+        if path != "reference":
+            continue
+        f = by.get((scen, n, "fast"))
+        if f is None:
+            continue
+        speedups[f"{scen}@n={n}"] = r["wall_s"] / f["wall_s"]
+        if f["modelled_round_time_s"] > r["modelled_round_time_s"] * (1 + 1e-9):
+            quality_ok = False
+    s512 = {k: v for k, v in speedups.items() if k.endswith("n=512")}
+    return {"speedups": speedups,
+            "min_speedup_at_512": min(s512.values()) if s512 else None,
+            "quality_no_worse_than_reference": quality_ok}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_scheduler_scaling.json")
+    ap.add_argument("--max-ref-n", type=int, default=512)
+    ap.add_argument("--full", action="store_true",
+                    help="run the reference path at every n")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    max_ref = max(NS) if args.full else args.max_ref_n
+    out = run(max_ref_n=max_ref, seed=args.seed)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

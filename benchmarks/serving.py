@@ -12,8 +12,14 @@ reordering delivers here.
 
 Policies:
 * ``fifo``      — arrival-order packing (head-of-line prefill blocks),
-* ``symbiotic`` — Algorithm 1 round composition (unmodified),
+* ``symbiotic`` — Algorithm 1 round composition (unmodified; the
+  vectorized incremental path, identical rounds to the reference),
 * ``refined``   — + local search under the round cost model.
+
+A second section runs the *real* ``ServingEngine`` (smoke-size model,
+greedy decode on CPU) and reports its ``ScheduleCache`` hit-rate:
+steady-state decode-heavy steps reuse the previous round composition
+instead of re-running greedy + guard + refine every ``step()``.
 """
 
 from __future__ import annotations
@@ -21,13 +27,13 @@ from __future__ import annotations
 import random
 from dataclasses import dataclass, field
 
-from repro.core import greedy_order
+from repro.core import greedy_order_fast
 from repro.core.refine import refine_order
 from repro.core.tpu import (decode_profile, fifo_rounds,
                             make_serving_device, prefill_profile,
                             round_time)
 
-__all__ = ["run", "simulate_load"]
+__all__ = ["run", "simulate_load", "engine_cache_stats"]
 
 N_PARAMS = 7e9
 KVB = 131072.0      # bytes/token (32L x 8kv x 128hd x 2 x bf16)
@@ -104,7 +110,7 @@ def simulate_load(kind: str, policy: str, *, seed: int = 3,
             rounds = fifo_rounds(items, device)
         else:
             profs = [i.profile() for i in items]
-            sched = greedy_order(profs, device)
+            sched = greedy_order_fast(profs, device)
             if policy == "refined":
                 def tfn(order):
                     its = [by[p.name][0] for p in order]
@@ -134,7 +140,36 @@ def simulate_load(kind: str, policy: str, *, seed: int = 3,
             "tokens": tokens, "tok_per_s": tokens / max(t_total, 1e-12)}
 
 
-def run(print_fn=print) -> list[dict]:
+def engine_cache_stats(*, n_requests: int = 6, max_new_tokens: int = 24,
+                       print_fn=print) -> dict:
+    """ScheduleCache hit-rate of the real engine on a decode-heavy
+    steady state (smoke-size model, CPU greedy decode)."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.serve import Request, SchedulerPolicy, ServingEngine
+
+    cfg = get_config("qwen1.5-0.5b", "smoke")
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    eng = ServingEngine(cfg, params, max_len=64,
+                        policy=SchedulerPolicy(kind="symbiotic"))
+    eng.submit([Request(i, rng.integers(0, 512, size=4),
+                        max_new_tokens=max_new_tokens)
+                for i in range(n_requests)])
+    stats = eng.run()
+    cache = stats["schedule_cache"]
+    print_fn(f"engine ScheduleCache: {cache['hits']} hits / "
+             f"{cache['misses']} misses "
+             f"(hit-rate {cache['hit_rate']:.1%}) over "
+             f"{stats['rounds']} rounds, "
+             f"{stats['total_new_tokens']} tokens")
+    return cache
+
+
+def run(print_fn=print, with_engine: bool = True) -> list[dict]:
     print_fn("# Symbiotic continuous batching (7B cost model, v5e)")
     print_fn("mix,policy,rounds,time_ms,tok_per_s,speedup_vs_fifo")
     out = []
@@ -149,4 +184,8 @@ def run(print_fn=print) -> list[dict]:
             print_fn(f"{kind},{policy},{r['rounds']},"
                      f"{r['time_s'] * 1e3:.1f},{r['tok_per_s']:.0f},"
                      f"{r['speedup_vs_fifo']:.3f}")
+    if with_engine:
+        print_fn("# ServingEngine schedule-cache (decode-heavy steady state)")
+        out.append({"kind": "engine-cache",
+                    **engine_cache_stats(print_fn=print_fn)})
     return out

@@ -10,9 +10,12 @@ from .scorer import (combined_ratio, fits_alone, fits_together, pair_score,
                      profile_combine, score_matrix, score_vector)
 from .scheduler import (Round, Schedule, exhaustive_search, greedy_order,
                         percentile_rank, random_orders)
-from .simulator import EventSimulator, RoundSimulator, simulate
+from .simulator import (EventSimulator, RoundCheckpoint, RoundSimulator,
+                        simulate)
 from .experiments import EXPERIMENTS, experiment
-from .refine import refine_order, refined_schedule
+from .fastscore import (ProfileTable, greedy_order_fast, pair_score_matrix,
+                        score_matrix_fast)
+from .refine import DeltaRoundEvaluator, refine_order, refined_schedule
 from .tpu import (TpuWorkItem, compose_rounds, decode_profile,
                   make_serving_device, prefill_profile)
 
@@ -23,9 +26,11 @@ __all__ = [
     "profile_combine", "score_matrix", "score_vector",
     "Round", "Schedule", "exhaustive_search", "greedy_order",
     "percentile_rank", "random_orders",
-    "EventSimulator", "RoundSimulator", "simulate",
+    "EventSimulator", "RoundCheckpoint", "RoundSimulator", "simulate",
     "EXPERIMENTS", "experiment",
-    "refine_order", "refined_schedule",
+    "ProfileTable", "greedy_order_fast", "pair_score_matrix",
+    "score_matrix_fast",
+    "DeltaRoundEvaluator", "refine_order", "refined_schedule",
     "TpuWorkItem", "compose_rounds", "decode_profile",
     "make_serving_device", "prefill_profile",
 ]

@@ -13,6 +13,25 @@ The output is the flat launch order ``Rd_0 ++ Rd_1 ++ ...``.
 
 Two baseline order generators (identity, random) and an exhaustive
 permutation search are provided for design-space evaluation.
+
+Complexity / when to use which path
+-----------------------------------
+This module is the *reference* implementation: pure Python over
+``KernelProfile`` objects, kept deliberately close to the paper's
+pseudocode so it can serve as the oracle in property tests.  Each
+round re-scans the remaining pairs (``O(n^2)`` ``pair_score`` calls
+per round, each building per-unit demand dicts), so a full schedule
+costs ``O(R * n^2)`` scored pairs — ``O(n^3)`` and beyond in wall
+time.  Fine up to a few dozen kernels.
+
+:mod:`repro.core.fastscore` is the production path: it packs profiles
+into NumPy arrays once, computes the pairwise matrix a single time
+with broadcasting (``O(n^2 * D)``), and maintains only the 1xn score
+vector of the current round's combined profile between absorptions
+(``O(n * D)`` per absorption), for ``O(n^2 * D)`` total.  It produces
+*identical* schedules (verified in ``tests/test_fastscore.py``); use
+it whenever ``n`` exceeds ~16 or scheduling sits on a serving hot
+path.
 """
 
 from __future__ import annotations
@@ -24,7 +43,7 @@ from typing import Callable, Sequence
 
 from .resources import DeviceModel, KernelProfile
 from .scorer import (fits_together, pair_score, profile_combine,
-                     score_matrix, score_vector)
+                     score_vector)
 
 __all__ = [
     "Round",
@@ -91,16 +110,17 @@ def greedy_order(kernels: Sequence[KernelProfile],
             rd.kernels.append(remaining.pop())
             rounds.append(rd)
             break
-        # Seed the round with the highest-scoring pair.
-        mat = score_matrix(remaining, remaining, device)
+        # Seed the round with the highest-scoring pair.  pair_score is
+        # symmetric, so scanning i < j only halves the ScoreGen work;
+        # the selection is unchanged because the first strict maximum
+        # of a symmetric matrix in row-major order always has i < j.
         best, best_pair = -1.0, (0, 1)
         n = len(remaining)
         for i in range(n):
-            for j in range(n):
-                if i == j:
-                    continue
-                if mat[i][j] > best:
-                    best, best_pair = mat[i][j], (i, j)
+            for j in range(i + 1, n):
+                s = pair_score(remaining[i], remaining[j], device)
+                if s > best:
+                    best, best_pair = s, (i, j)
         i, j = best_pair
         ka, kb = remaining[i], remaining[j]
         if best <= 0.0 and not fits_together(ka, kb, device):
@@ -164,10 +184,13 @@ def random_orders(kernels: Sequence[KernelProfile], n: int,
 
 
 def percentile_rank(value: float, population: Sequence[float]) -> float:
-    """Fraction of the population that is *no better* (>=) than ``value``.
+    """Percentile (0-100) of the population that is *no better* (>=)
+    than ``value``.
 
-    Matches the paper's usage: a launch order in the 96th percentile
-    beats 96% of all permutations (lower time is better).
+    Matches the paper's usage: a launch order at ``percentile_rank ==
+    96.0`` beats 96% of all permutations (lower time is better).  The
+    return value is a percentage, **not** a 0-1 fraction — pinned by
+    ``tests/test_fastscore.py::test_percentile_rank_convention``.
     """
     population = list(population)
     if not population:

@@ -58,9 +58,13 @@ def combined_ratio(a: KernelProfile, b: KernelProfile,
     physically correct combined intensity (beyond-paper; required when
     R_i span orders of magnitude)."""
     if mode == "harmonic":
+        # Guard r == 0 (pure-memory kernels report zero intensity): the
+        # clamped denominator keeps the combined ratio finite and ~0,
+        # i.e. the pair is treated as memory-bound, which is the
+        # physically right limit.
         work = a.inst_per_block * a.n_blocks + b.inst_per_block * b.n_blocks
-        byts = (a.inst_per_block * a.n_blocks / a.r +
-                b.inst_per_block * b.n_blocks / b.r)
+        byts = (a.inst_per_block * a.n_blocks / max(a.r, 1e-30) +
+                b.inst_per_block * b.n_blocks / max(b.r, 1e-30))
         return work / max(byts, 1e-30)
     w = a.n_blocks + b.n_blocks
     return (a.n_blocks * a.r + b.n_blocks * b.r) / w

@@ -37,13 +37,38 @@ from typing import Sequence
 
 from .resources import DeviceModel, KernelProfile
 
-__all__ = ["RoundSimulator", "EventSimulator", "simulate"]
+__all__ = ["RoundSimulator", "RoundCheckpoint", "EventSimulator",
+           "simulate"]
 
 _EPS = 1e-12
 
 
+@dataclass(frozen=True)
+class RoundCheckpoint:
+    """Admission state at one round boundary of a round-model run.
+
+    ``pos`` is the order index of the head kernel when the round
+    opened, ``blocks_left`` how many of its per-unit blocks were still
+    undispatched (== its full count when the previous round did not
+    split it), and ``time`` the cumulative time of all earlier rounds.
+    A candidate order that only differs from the recorded one at
+    positions >= p can resume from the latest checkpoint whose
+    consumed prefix lies strictly before p (produced and consumed by
+    :class:`repro.core.refine.DeltaRoundEvaluator`).
+    """
+
+    pos: int
+    blocks_left: int
+    time: float
+
+
 @dataclass
 class RoundSimulator:
+    """Reference round model, kept deliberately simple: it is the
+    oracle the optimized delta evaluator
+    (:class:`repro.core.refine.DeltaRoundEvaluator`) is
+    property-tested against for exact equality."""
+
     device: DeviceModel
 
     def simulate(self, order: Sequence[KernelProfile]) -> float:

@@ -1,0 +1,46 @@
+"""Aliases for JAX API drift between the pinned 0.4.x and >=0.5.
+
+The codebase is written against the consolidated surface:
+
+* ``jax.set_mesh(mesh)`` used as a context manager, and
+* ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...)``.
+
+On 0.4.x the same functionality exists as the ``Mesh`` context manager
+and ``jax.experimental.shard_map.shard_map`` (whose replication check
+is spelled ``check_rep``).  ``install()`` adds thin aliases when the
+attributes are missing; on a new-enough JAX it is a no-op.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["install"]
+
+
+def install() -> None:
+    if not hasattr(jax, "set_mesh"):
+        def set_mesh(mesh):
+            # ``Mesh`` is itself a context manager on 0.4.x; entering it
+            # installs the resource environment the way set_mesh does.
+            return mesh
+
+        jax.set_mesh = set_mesh
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        _UNSET = object()
+
+        def shard_map(f, *, mesh=None, in_specs=None, out_specs=None,
+                      check_vma=_UNSET, **kwargs):
+            check_rep = kwargs.pop("check_rep", check_vma)
+            if check_rep is _UNSET:
+                # Both the 0.4.x check_rep and the modern check_vma
+                # default to True — preserve that when unspecified.
+                check_rep = True
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs,
+                              check_rep=bool(check_rep), **kwargs)
+
+        jax.shard_map = shard_map

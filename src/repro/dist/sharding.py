@@ -1,0 +1,142 @@
+"""Placement policies: parameter, batch and cache sharding specs.
+
+One convention everywhere: the mesh axis named ``"model"`` is tensor
+parallelism; every other axis is data parallelism (``"data"``, plus
+``"pod"`` on multi-pod meshes).  Dimensions are only sharded when they
+divide the axis size evenly, so no spec here ever introduces padding.
+
+* ``param_specs(mode="train")`` — TP over ``model`` on the largest
+  divisible dimension, then FSDP over the data axes on the largest
+  remaining divisible dimension.
+* ``param_specs(mode="serve")`` — TP-only *resident* weights (no
+  per-layer all-gathers on the decode path).
+* ``cache_specs`` — batch dimension over the data axes, one more
+  divisible dimension (kv heads) over ``model``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "batch_spec",
+    "named",
+    "param_specs",
+    "cache_specs",
+    "serve_weights_resident",
+]
+
+
+def _dp_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _dp_entry(mesh):
+    axes = _dp_axes(mesh)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _model_size(mesh) -> int:
+    return int(mesh.shape.get("model", 1))
+
+
+def _data_size(mesh) -> int:
+    return math.prod(int(mesh.shape[a]) for a in _dp_axes(mesh))
+
+
+def batch_spec(mesh) -> P:
+    """PartitionSpec whose leading entry is the batch (data) sharding."""
+    return P(_dp_entry(mesh))
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def named(mesh, spec_tree):
+    """Map a tree of PartitionSpecs to NamedShardings on ``mesh``."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=_is_spec)
+
+
+def _leaf_spec(shape, *, msize: int, dsize: int, dp_entry,
+               fsdp: bool) -> P:
+    if not shape:
+        return P()
+    entries: list[Any] = [None] * len(shape)
+    order = sorted(range(len(shape)), key=lambda i: shape[i], reverse=True)
+    ti = None
+    if msize > 1:
+        ti = next((i for i in order if shape[i] % msize == 0), None)
+        if ti is not None:
+            entries[ti] = "model"
+    if fsdp and dsize > 1:
+        di = next((i for i in order
+                   if i != ti and shape[i] % dsize == 0), None)
+        if di is not None:
+            entries[di] = dp_entry
+    return P(*entries)
+
+
+def param_specs(params, mesh, mode: str = "train"):
+    """Tree of PartitionSpecs matching ``params`` (arrays or abstract
+    ShapeDtypeStructs)."""
+    msize, dsize = _model_size(mesh), _data_size(mesh)
+    dp = _dp_entry(mesh)
+    fsdp = mode == "train"
+
+    def spec(leaf):
+        return _leaf_spec(tuple(getattr(leaf, "shape", ()) or ()),
+                          msize=msize, dsize=dsize, dp_entry=dp, fsdp=fsdp)
+
+    return jax.tree.map(spec, params)
+
+
+def cache_specs(cache, mesh):
+    """KV/state cache specs: batch over data axes, kv-heads over model."""
+    msize, dsize = _model_size(mesh), _data_size(mesh)
+    dp = _dp_entry(mesh)
+
+    def spec(leaf):
+        shape = tuple(getattr(leaf, "shape", ()) or ())
+        if not shape:
+            return P()
+        entries: list[Any] = [None] * len(shape)
+        if dsize > 1 and shape[0] % dsize == 0:
+            entries[0] = dp
+        if msize > 1:
+            order = sorted(range(1, len(shape)), key=lambda i: shape[i],
+                           reverse=True)
+            ti = next((i for i in order if shape[i] % msize == 0), None)
+            if ti is not None:
+                entries[ti] = "model"
+        return P(*entries)
+
+    return jax.tree.map(spec, cache)
+
+
+def serve_weights_resident(params, mesh, *,
+                           hbm_bytes_per_chip: float = 16 * 1024**3,
+                           resident_frac: float = 0.5) -> bool:
+    """True when TP-only (``mode="serve"``) weights fit resident per
+    chip, i.e. the decode step may be unrolled without materialising
+    per-layer FSDP all-gathers (see :mod:`repro.launch.dryrun`)."""
+    msize = _model_size(mesh)
+
+    def leaf_bytes(leaf) -> float:
+        shape = tuple(getattr(leaf, "shape", ()) or ())
+        dtype = getattr(leaf, "dtype", None)
+        item = jax.numpy.dtype(dtype).itemsize if dtype is not None else 4
+        n = math.prod(shape) if shape else 1
+        if msize > 1 and any(s % msize == 0 for s in shape):
+            n //= msize
+        return float(n * item)
+
+    total = sum(leaf_bytes(l) for l in jax.tree.leaves(params))
+    return total <= resident_frac * hbm_bytes_per_chip

@@ -94,7 +94,7 @@ class MLSTM:
             logf = jax.nn.log_sigmoid(fb.astype(jnp.float32))   # (B,ck,H)
             F = jnp.cumsum(logf, axis=1)                        # (B,ck,H)
             # Row stabiliser: m_t = F_t + max(m_a, cummax_s(i_s - F_s))
-            g = jnp.maximum.accumulate(ib - F, axis=1)          # cummax
+            g = jax.lax.cummax(ib - F, axis=1)                  # cummax
             m_t = F + jnp.maximum(m_a[:, None, :], g)           # (B,ck,H)
             # Inter-chunk contribution (state carries scale exp(m_a)).
             w_inter = jnp.exp(m_a[:, None, :] + F - m_t)        # (B,ck,H)

@@ -1,5 +1,5 @@
 """Serving substrate: KV-cache engine + symbiotic round scheduler."""
 
-from .engine import Request, SchedulerPolicy, ServingEngine
+from .engine import Request, ScheduleCache, SchedulerPolicy, ServingEngine
 
-__all__ = ["Request", "SchedulerPolicy", "ServingEngine"]
+__all__ = ["Request", "ScheduleCache", "SchedulerPolicy", "ServingEngine"]

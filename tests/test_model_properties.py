@@ -2,6 +2,12 @@
 autoregressive decode with a cache reproduces the full forward pass,
 across randomly drawn architectures (family, widths, patterns)."""
 
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not available in the pinned toolchain")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

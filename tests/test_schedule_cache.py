@@ -1,0 +1,39 @@
+"""Unit tests for the serving ScheduleCache (no model, no jax device
+work): signatures, key multisets, pattern replay, LRU bound."""
+
+from repro.serve import ScheduleCache
+
+
+def test_signature_buckets_decode_kv_lens():
+    c = ScheduleCache(kv_bucket=256)
+    assert c.signature("decode", 0) == c.signature("decode", 255)
+    assert c.signature("decode", 255) != c.signature("decode", 256)
+    # prefill is keyed by exact token count (compiled geometry)
+    assert c.signature("prefill", 128) != c.signature("prefill", 129)
+
+
+def test_key_is_order_invariant_multiset():
+    a = [("d", 1), ("p", 128), ("d", 1)]
+    b = [("d", 1), ("d", 1), ("p", 128)]
+    assert ScheduleCache.key_of(a) == ScheduleCache.key_of(b)
+    assert ScheduleCache.key_of(a) != ScheduleCache.key_of(a[:2])
+
+
+def test_lookup_store_and_hit_accounting():
+    c = ScheduleCache()
+    key = ("symbiotic", ScheduleCache.key_of([("d", 0), ("p", 8)]))
+    assert c.lookup(key) is None
+    pattern = ((("p", 8), ("d", 0)),)
+    c.store(key, pattern)
+    assert c.lookup(key) == pattern
+    assert c.hits == 1 and c.misses == 1
+    assert c.hit_rate == 0.5
+    assert c.stats()["entries"] == 1
+
+
+def test_lru_eviction_bound():
+    c = ScheduleCache(max_entries=4)
+    for i in range(10):
+        c.store(("k", i), ())
+    assert len(c._store) == 4
+    assert ("k", 9) in c._store and ("k", 5) not in c._store

@@ -2,6 +2,12 @@
 
 import math
 
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not available in the pinned toolchain")
+
 import hypothesis.strategies as st
 from hypothesis import given, settings
 
