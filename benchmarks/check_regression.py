@@ -1,0 +1,109 @@
+"""CI guard: fail on schedule-construction wall-time regressions.
+
+Re-runs the ``benchmarks/scaling.py`` fast-path construction cells on
+this machine and diffs them against the committed
+``BENCH_scheduler_scaling.json``: any (scenario, n) whose fresh
+``path="fast"`` wall time exceeds the committed one by more than
+``--threshold`` (default 1.25x, plus ``--abs-slack`` seconds so
+millisecond-scale cells don't flap on timer jitter) fails the check
+with exit code 1.  The event-refine delta cells are compared the same
+way (their wall time is the event-model refinement hot path).  Both
+sides use best-of-``--repeats`` wall times (the committed JSON records
+its own ``repeats``), the standard protocol for wall-clock guards.
+
+This is a same-machine tool: committed numbers are only comparable to
+runs on comparable hardware, so the intended use is "run the benchmark
+before and after a change on one box" (or a pinned CI runner), not
+cross-machine comparison.
+
+Run:  PYTHONPATH=src python benchmarks/check_regression.py
+      PYTHONPATH=src python benchmarks/check_regression.py --quick
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import scaling  # noqa: E402
+
+#: cells whose wall time is a guarded hot path
+_GUARDED_PATHS = ("fast", "event_delta")
+
+
+def compare(committed: dict, fresh: dict, threshold: float,
+            abs_slack: float = 0.05) -> list[str]:
+    """Regression messages for every guarded cell above threshold."""
+    old = {(r["scenario"], r["n"], r["path"]): r["wall_s"]
+           for r in committed.get("results", [])
+           if r["path"] in _GUARDED_PATHS}
+    regressions = []
+    for r in fresh.get("results", []):
+        key = (r["scenario"], r["n"], r["path"])
+        if r["path"] not in _GUARDED_PATHS or key not in old:
+            continue
+        base = old[key]
+        if base > 0 and r["wall_s"] > base * threshold + abs_slack:
+            regressions.append(
+                f"{key[0]}@n={key[1]}[{key[2]}]: "
+                f"{r['wall_s']:.3f}s vs committed {base:.3f}s "
+                f"({r['wall_s'] / base:.2f}x > {threshold:.2f}x)")
+    return regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_scheduler_scaling.json"),
+        help="committed benchmark JSON to diff against")
+    ap.add_argument("--threshold", type=float, default=1.25)
+    ap.add_argument("--abs-slack", type=float, default=0.05,
+                    help="absolute seconds of slack on top of the "
+                         "ratio threshold (timer jitter floor)")
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="best-of-k for the fresh run (default: the "
+                         "committed JSON's own repeats)")
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the slow oracle/full baselines entirely "
+                         "(fresh run measures only the guarded cells)")
+    ap.add_argument("--out", default=None,
+                    help="optionally write the fresh run's JSON here")
+    args = ap.parse_args(argv)
+
+    with open(args.bench) as f:
+        committed = json.load(f)
+    # The guarded cells are the fast/delta paths; the reference oracle
+    # and full-re-sim baselines only provide speedup context, so the
+    # fresh run can skip them (--quick) without losing coverage.
+    max_ref = 0 if args.quick else committed.get("max_ref_n", 512)
+    max_event_full = (0 if args.quick
+                      else committed.get("max_event_full_n", 256))
+    repeats = (args.repeats if args.repeats is not None
+               else committed.get("repeats", 2))
+    fresh = scaling.run(max_ref_n=max_ref,
+                        max_event_full_n=max_event_full,
+                        repeats=repeats)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(fresh, f, indent=2)
+    regressions = compare(committed, fresh, args.threshold,
+                          args.abs_slack)
+    if regressions:
+        print("\nREGRESSION: construction wall time exceeded "
+              f"{args.threshold:.2f}x the committed baseline:")
+        for msg in regressions:
+            print(f"  {msg}")
+        return 1
+    n_cells = sum(1 for r in fresh["results"]
+                  if r["path"] in _GUARDED_PATHS)
+    print(f"\nok: {n_cells} guarded cells within "
+          f"{args.threshold:.2f}x of committed baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

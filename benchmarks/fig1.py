@@ -11,8 +11,8 @@ import itertools
 
 import numpy as np
 
-from repro.core import (GTX580, EXPERIMENTS, greedy_order, percentile_rank,
-                        simulate)
+from repro.core import (GTX580, EXPERIMENTS, greedy_order_fast,
+                        percentile_rank, simulate)
 from repro.core.refine import refined_schedule
 
 __all__ = ["run"]
@@ -20,7 +20,7 @@ __all__ = ["run"]
 
 def run(print_fn=print) -> dict:
     ks = EXPERIMENTS["EpBsEsSw-8"]()
-    sched = greedy_order(ks, GTX580)
+    sched = greedy_order_fast(ks, GTX580)
     t_alg = simulate(sched.order, GTX580)
     _, t_ref = refined_schedule(ks, GTX580)
     times = np.array([simulate([ks[i] for i in p], GTX580)

@@ -5,14 +5,25 @@ For n in {8, 32, 128, 512, 1024} kernels, on two workload mixes
 
 * wall time of schedule construction — greedy + default-budget refine
   (200 evaluations, the serving default) — for the pure-Python
-  reference path vs the vectorized/incremental fast path, and
+  reference path (the test-only oracle) vs the vectorized/incremental
+  fast path, and
 * the modelled execution time of the produced order under both the
   round model (the refine objective) and the event simulator,
 
-and emits ``BENCH_scheduler_scaling.json`` for the perf trajectory.
-The reference path is O(R * n^2) Python-level ScoreGen reruns and is
+plus a second section for **event-model refinement** at n in
+{64, 128, 256, 512, 1024}: full re-simulation per candidate (the
+reference ``EventSimulator``, the pre-checkpointing status quo) vs
+the checkpointing delta path (``refine_order(model="event")``, suffix
+re-simulation via ``DeltaEvaluator``), reporting effective-move
+throughput (candidate moves evaluated per second) for both.  The
+acceptance bar is >= 5x delta throughput at n = 256.
+
+Emits ``BENCH_scheduler_scaling.json`` for the perf trajectory
+(consumed by ``benchmarks/check_regression.py``).  The reference
+construction path is O(R * n^2) Python-level ScoreGen reruns and is
 skipped above ``--max-ref-n`` (default 512, ~35 s there); pass
-``--full`` to run it everywhere.
+``--full`` to run it everywhere.  The full-re-sim event-refine path
+is skipped above ``--max-event-full-n`` (default 256).
 
 Run:  PYTHONPATH=src python benchmarks/scaling.py
 """
@@ -24,8 +35,8 @@ import json
 import random
 import time
 
-from repro.core import (GTX580, RoundSimulator, greedy_order,
-                        greedy_order_fast, simulate)
+from repro.core import (GTX580, EventSimulator, RoundSimulator,
+                        greedy_order, greedy_order_fast, simulate)
 from repro.core.refine import refine_order
 from repro.core.resources import (KernelProfile, bs_kernel, ep_kernel,
                                   es_kernel, sw_kernel)
@@ -33,6 +44,13 @@ from repro.core.tpu import decode_profile, make_serving_device, prefill_profile
 
 REFINE_BUDGET = 200
 NS = (8, 32, 128, 512, 1024)
+#: event-model refine: budget in full-simulation equivalents, and the
+#: ns it is measured at (the serving-relevant 64..1024 band).  Kept
+#: deliberately small: event re-simulation is the expensive objective,
+#: and a serving deployment would spend far less on it than the
+#: round-model default of 200.
+EVENT_BUDGET = 40
+EVENT_NS = (64, 128, 256, 512, 1024)
 _FAMS = [ep_kernel, bs_kernel, es_kernel, sw_kernel]
 
 
@@ -65,6 +83,20 @@ SCENARIOS = (
 )
 
 
+def _best_of(repeats: int, fn):
+    """Run ``fn`` ``repeats`` times; keep the record with the smallest
+    wall time.  Construction is deterministic, so min-of-k only strips
+    scheduler/host noise from the timing — the standard protocol for
+    wall-clock guards (``check_regression.py`` compares min against
+    min)."""
+    best = None
+    for _ in range(max(repeats, 1)):
+        rec = fn()
+        if best is None or rec["wall_s"] < best["wall_s"]:
+            best = rec
+    return best
+
+
 def construct(ks, device, path: str) -> dict:
     """Greedy + default-budget refine; returns wall time + quality."""
     t0 = time.perf_counter()
@@ -90,20 +122,44 @@ def construct(ks, device, path: str) -> dict:
     }
 
 
-def run(max_ref_n: int = 512, seed: int = 0,
-        print_fn=print) -> dict:
+def event_refine(ks, device, path: str) -> dict:
+    """Event-model local search on the greedy order; returns wall time,
+    evaluated moves and effective-move throughput."""
+    order = greedy_order_fast(ks, device).order
+    t0 = time.perf_counter()
+    if path == "event_full":
+        sim = EventSimulator(device)
+        _, t_ev, evals = refine_order(
+            order, device, time_fn=sim.simulate,
+            budget=EVENT_BUDGET, neighborhood="adjacent")
+    else:
+        _, t_ev, evals = refine_order(
+            order, device, model="event", budget=EVENT_BUDGET,
+            neighborhood="adjacent")
+    wall = time.perf_counter() - t0
+    return {"path": path, "wall_s": wall, "refine_evals": evals,
+            "moves_per_s": evals / max(wall, 1e-9),
+            "modelled_event_time_s": t_ev}
+
+
+def run(max_ref_n: int = 512, seed: int = 0, max_event_full_n: int = 256,
+        repeats: int = 2, print_fn=print) -> dict:
     results = []
     print_fn("# Scheduler scaling: reference vs vectorized "
-             f"(refine budget {REFINE_BUDGET})")
+             f"(refine budget {REFINE_BUDGET}, best of {repeats})")
     print_fn("scenario,n,path,wall_s,round_time_s,event_time_s,speedup")
     for name, device, maker in SCENARIOS:
         for n in NS:
             rng = random.Random(seed)
             ks = maker(rng, n)
-            fast = construct(ks, device, "fast")
+            fast = _best_of(repeats,
+                            lambda: construct(ks, device, "fast"))
             ref = None
             if n <= max_ref_n:
-                ref = construct(ks, device, "reference")
+                # Same best-of-k protocol as the fast cell: asymmetric
+                # sampling would systematically inflate the speedups.
+                ref = _best_of(repeats,
+                               lambda: construct(ks, device, "reference"))
             for rec in filter(None, (ref, fast)):
                 speedup = (ref["wall_s"] / fast["wall_s"]
                            if ref is not None and rec is fast else "")
@@ -113,10 +169,33 @@ def run(max_ref_n: int = 512, seed: int = 0,
                          f"{rec['modelled_event_time_s']:.5f},"
                          f"{speedup if speedup == '' else f'{speedup:.1f}'}")
                 results.append({"scenario": name, "n": n, **rec})
+    print_fn("# Event-model refine: full re-sim vs checkpoint delta "
+             f"(budget {EVENT_BUDGET} full-sim equivalents)")
+    print_fn("scenario,n,path,wall_s,evals,moves_per_s,throughput_ratio")
+    for n in EVENT_NS:
+        rng = random.Random(seed)
+        ks = gpu_mix(rng, n)
+        delta = _best_of(repeats,
+                         lambda: event_refine(ks, GTX580, "event_delta"))
+        full = None
+        if n <= max_event_full_n:
+            full = _best_of(repeats,
+                            lambda: event_refine(ks, GTX580, "event_full"))
+        for rec in filter(None, (full, delta)):
+            ratio = (rec["moves_per_s"] / full["moves_per_s"]
+                     if full is not None and rec is delta else "")
+            print_fn(f"gpu_mix,{n},{rec['path']},{rec['wall_s']:.4f},"
+                     f"{rec['refine_evals']},{rec['moves_per_s']:.1f},"
+                     f"{ratio if ratio == '' else f'{ratio:.1f}'}")
+            results.append({"scenario": "gpu_mix", "n": n, **rec})
     summary = _summary(results)
     out = {"benchmark": "scheduler_scaling",
            "refine_budget": REFINE_BUDGET,
-           "ns": list(NS), "max_ref_n": max_ref_n,
+           "event_refine_budget": EVENT_BUDGET,
+           "ns": list(NS), "event_ns": list(EVENT_NS),
+           "max_ref_n": max_ref_n,
+           "max_event_full_n": max_event_full_n,
+           "repeats": repeats,
            "results": results, "summary": summary}
     print_fn(f"summary: {json.dumps(summary)}")
     return out
@@ -136,21 +215,37 @@ def _summary(results: list[dict]) -> dict:
         if f["modelled_round_time_s"] > r["modelled_round_time_s"] * (1 + 1e-9):
             quality_ok = False
     s512 = {k: v for k, v in speedups.items() if k.endswith("n=512")}
+    event_tp = {}
+    for (scen, n, path), r in by.items():
+        if path != "event_full":
+            continue
+        d = by.get((scen, n, "event_delta"))
+        if d is not None:
+            event_tp[f"{scen}@n={n}"] = (d["moves_per_s"] /
+                                         max(r["moves_per_s"], 1e-9))
+    tp256 = [v for k, v in event_tp.items() if k.endswith("n=256")]
     return {"speedups": speedups,
             "min_speedup_at_512": min(s512.values()) if s512 else None,
-            "quality_no_worse_than_reference": quality_ok}
+            "quality_no_worse_than_reference": quality_ok,
+            "event_move_throughput_ratios": event_tp,
+            "event_delta_throughput_at_256": tp256[0] if tp256 else None}
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_scheduler_scaling.json")
     ap.add_argument("--max-ref-n", type=int, default=512)
+    ap.add_argument("--max-event-full-n", type=int, default=256)
     ap.add_argument("--full", action="store_true",
                     help="run the reference path at every n")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--repeats", type=int, default=2,
+                    help="best-of-k wall times for the guarded cells")
     args = ap.parse_args(argv)
     max_ref = max(NS) if args.full else args.max_ref_n
-    out = run(max_ref_n=max_ref, seed=args.seed)
+    out = run(max_ref_n=max_ref, seed=args.seed,
+              max_event_full_n=args.max_event_full_n,
+              repeats=args.repeats)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {args.out}")

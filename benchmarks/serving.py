@@ -143,7 +143,9 @@ def simulate_load(kind: str, policy: str, *, seed: int = 3,
 def engine_cache_stats(*, n_requests: int = 6, max_new_tokens: int = 24,
                        print_fn=print) -> dict:
     """ScheduleCache hit-rate of the real engine on a decode-heavy
-    steady state (smoke-size model, CPU greedy decode)."""
+    steady state (smoke-size model, CPU greedy decode), with staggered
+    arrivals so cache *near-misses* (one request joining the mix)
+    exercise the warm-start path."""
     import jax
     import numpy as np
 
@@ -159,11 +161,16 @@ def engine_cache_stats(*, n_requests: int = 6, max_new_tokens: int = 24,
     eng.submit([Request(i, rng.integers(0, 512, size=4),
                         max_new_tokens=max_new_tokens)
                 for i in range(n_requests)])
-    stats = eng.run()
+    late = [(4, [Request(100, rng.integers(0, 512, size=4),
+                         max_new_tokens=max_new_tokens // 2)]),
+            (8, [Request(101, rng.integers(0, 512, size=4),
+                         max_new_tokens=max_new_tokens // 2)])]
+    stats = eng.run(arrivals=late)
     cache = stats["schedule_cache"]
     print_fn(f"engine ScheduleCache: {cache['hits']} hits / "
              f"{cache['misses']} misses "
-             f"(hit-rate {cache['hit_rate']:.1%}) over "
+             f"({cache['warm_hits']} warm starts, "
+             f"hit-rate {cache['hit_rate']:.1%}) over "
              f"{stats['rounds']} rounds, "
              f"{stats['total_new_tokens']} tokens")
     return cache

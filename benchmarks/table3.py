@@ -14,8 +14,8 @@ import random
 
 import numpy as np
 
-from repro.core import (GTX580, EXPERIMENTS, greedy_order, percentile_rank,
-                        simulate)
+from repro.core import (GTX580, EXPERIMENTS, greedy_order_fast,
+                        percentile_rank, simulate)
 from repro.core.refine import refined_schedule
 
 __all__ = ["run", "rows"]
@@ -41,7 +41,7 @@ def rows() -> list[dict]:
     out = []
     for name in EXPERIMENTS:
         ks = EXPERIMENTS[name]()
-        sched = greedy_order(ks, GTX580)
+        sched = greedy_order_fast(ks, GTX580)
         t_alg = simulate(sched.order, GTX580)
         _, t_ref = refined_schedule(ks, GTX580)
         times = _space(ks)

@@ -9,14 +9,14 @@ and shows the TPU adaptation composing a serving round.
 
 import itertools
 
-from repro.core import (GTX580, EXPERIMENTS, greedy_order, simulate,
+from repro.core import (GTX580, EXPERIMENTS, greedy_order_fast, simulate,
                         percentile_rank)
 from repro.core.refine import refined_schedule
 from repro.core.tpu import compose_rounds, decode_profile, prefill_profile
 
 # --- 1. reproduce the paper's EpBsEsSw-8 experiment --------------------
 kernels = EXPERIMENTS["EpBsEsSw-8"]()
-sched = greedy_order(kernels, GTX580)
+sched = greedy_order_fast(kernels, GTX580)
 print("Algorithm 1 rounds:", [r.names for r in sched.rounds])
 
 t_alg = simulate(sched.order, GTX580)

@@ -10,12 +10,13 @@ from .scorer import (combined_ratio, fits_alone, fits_together, pair_score,
                      profile_combine, score_matrix, score_vector)
 from .scheduler import (Round, Schedule, exhaustive_search, greedy_order,
                         percentile_rank, random_orders)
-from .simulator import (EventSimulator, RoundCheckpoint, RoundSimulator,
-                        simulate)
+from .simulator import (EventCheckpoint, EventSimulator, RoundCheckpoint,
+                        RoundSimulator, simulate)
 from .experiments import EXPERIMENTS, experiment
 from .fastscore import (ProfileTable, greedy_order_fast, pair_score_matrix,
-                        score_matrix_fast)
-from .refine import DeltaRoundEvaluator, refine_order, refined_schedule
+                        score_matrix_fast, warm_start_insert)
+from .refine import (DeltaEvaluator, DeltaRoundEvaluator, refine_order,
+                     refined_schedule)
 from .tpu import (TpuWorkItem, compose_rounds, decode_profile,
                   make_serving_device, prefill_profile)
 
@@ -26,11 +27,13 @@ __all__ = [
     "profile_combine", "score_matrix", "score_vector",
     "Round", "Schedule", "exhaustive_search", "greedy_order",
     "percentile_rank", "random_orders",
-    "EventSimulator", "RoundCheckpoint", "RoundSimulator", "simulate",
+    "EventCheckpoint", "EventSimulator", "RoundCheckpoint",
+    "RoundSimulator", "simulate",
     "EXPERIMENTS", "experiment",
     "ProfileTable", "greedy_order_fast", "pair_score_matrix",
-    "score_matrix_fast",
-    "DeltaRoundEvaluator", "refine_order", "refined_schedule",
+    "score_matrix_fast", "warm_start_insert",
+    "DeltaEvaluator", "DeltaRoundEvaluator", "refine_order",
+    "refined_schedule",
     "TpuWorkItem", "compose_rounds", "decode_profile",
     "make_serving_device", "prefill_profile",
 ]

@@ -37,7 +37,7 @@ from .resources import DeviceModel, KernelProfile
 from .scheduler import Round, Schedule, _sort_key
 
 __all__ = ["ProfileTable", "pair_score_matrix", "score_matrix_fast",
-           "greedy_order_fast"]
+           "greedy_order_fast", "warm_start_insert"]
 
 
 @dataclass
@@ -201,6 +201,46 @@ def _absorb(comb: _CombState, table: ProfileTable, c: int,
                       n_blocks=comb.n_blocks + table.n_blocks[c],
                       inst=comb.inst + table.inst[c],
                       r=new_r)
+
+
+def warm_start_insert(rounds: Sequence[Sequence[KernelProfile]],
+                      extra: KernelProfile,
+                      device: DeviceModel) -> int:
+    """Greedy ScoreGen placement of one extra kernel into an existing
+    round composition.
+
+    Returns the index of the best-scoring round whose combined profile
+    (ProfileCombine fold, exactly as the incremental greedy maintains
+    it) still fits together with ``extra``, or ``-1`` when no round
+    fits and the kernel must open a new round.
+
+    This is the ScheduleCache warm-start primitive: a near-miss cached
+    composition (one request joined the mix since the cached step) is
+    adapted by absorbing the newcomer where Algorithm 1's own scoring
+    would put it, instead of recomputing the whole composition from
+    scratch.
+    """
+    rounds = [rd for rd in rounds if rd]
+    if not rounds:
+        return -1
+    all_ks = [k for rd in rounds for k in rd] + [extra]
+    table = ProfileTable.build(all_ks, device)
+    extra_idx = np.asarray([len(all_ks) - 1])
+    best_i, best_s = -1, -np.inf
+    base = 0
+    for i, rd in enumerate(rounds):
+        comb = _CombState(demand=table.per_unit[base].copy(),
+                          bpu=float(table.bpu[base]),
+                          n_blocks=float(table.n_blocks[base]),
+                          inst=float(table.inst[base]),
+                          r=float(table.r[base]))
+        for c in range(base + 1, base + len(rd)):
+            comb = _absorb(comb, table, c, device)
+        base += len(rd)
+        scores, fits = _comb_scores(comb, table, extra_idx)
+        if bool(fits[0]) and float(scores[0]) > best_s:
+            best_i, best_s = i, float(scores[0])
+    return best_i
 
 
 def greedy_order_fast(kernels: Sequence[KernelProfile],

@@ -22,20 +22,28 @@ evaluates an 8-kernel order in well under a millisecond, against a
 Complexity / when to use which path
 -----------------------------------
 A naive candidate evaluation re-simulates the whole order: ``O(n)``
-rounds per candidate, ``O(n^3)`` per full-neighbourhood sweep.  Two
-levers make refinement affordable at serving scale:
+rounds (or all dispatch events) per candidate, ``O(n^3)`` per full
+neighbourhood sweep.  Two levers make refinement affordable at serving
+scale:
 
-* **Delta evaluation** (automatic for ``model="round"`` with no custom
-  ``time_fn``): the :class:`DeltaRoundEvaluator` caches the
-  RoundSimulator's per-round admission checkpoints for the incumbent
-  order, so a candidate differing only at positions >= p re-simulates
-  just the suffix of rounds from the last checkpoint before p —
-  ``O(n - p)`` instead of ``O(n)``.  The budget is charged in
-  full-simulation equivalents (a suffix re-sim costs its fraction), so
-  the default serving budget buys roughly an order of magnitude more
-  effective moves; on the adjacent move set, moves straddling a round
-  boundary are tried first, cheapest (latest suffix) first within each
-  class ("early-exit ordering").
+* **Delta evaluation** (automatic for ``model="round"`` *and*
+  ``model="event"`` with no custom ``time_fn``): the
+  :class:`DeltaEvaluator` caches the simulator's admission checkpoints
+  for the incumbent order, so a candidate differing only at positions
+  >= p re-simulates just the suffix from the last checkpoint before p
+  — ``O(n - p)`` instead of ``O(n)``.  Under the round model the
+  checkpoints are the :class:`~repro.core.simulator.RoundCheckpoint`
+  round boundaries; under the event model every order position gets an
+  :class:`~repro.core.simulator.EventCheckpoint` capturing the full
+  dispatcher state (per-unit residency, cohort fractions, round-robin
+  pointer) at the instant that position is first examined.  The budget
+  is charged in full-simulation equivalents (a suffix re-sim costs its
+  fraction), so the default serving budget buys roughly an order of
+  magnitude more effective moves; on the adjacent move set, moves
+  straddling a round boundary are tried first, cheapest (latest
+  suffix) first within each class ("early-exit ordering" — under the
+  event model every position is a boundary, so moves are simply tried
+  cheapest first).
 * **``neighborhood="adjacent"``**: restrict moves to adjacent swaps
   and short-range reinsertions — ``O(n)`` candidates per sweep instead
   of ``O(n^2)``.  This is the right regime on a serving hot path
@@ -47,26 +55,34 @@ levers make refinement affordable at serving scale:
   offline default.
 
 Delta-evaluated times are *exactly* equal to full re-simulation
-(property-tested in ``tests/test_fastscore.py``): resuming from a
-checkpoint replays the identical float accumulation.
+(property-tested in ``tests/test_fastscore.py`` for the round model
+and ``tests/test_event_delta.py`` for the event model): resuming from
+a checkpoint replays the identical float accumulation.  The fast
+simulators in this module (:class:`_FastRoundSim`,
+:class:`_FastEventSim`) are operation-for-operation ports of their
+reference oracles with per-kernel profile data resolved to flat tuples
+once, which is what makes thousands of suffix re-simulations per
+refinement affordable.
 """
 
 from __future__ import annotations
 
+import math
 from typing import Callable, Sequence
 
 from .fastscore import greedy_order_fast
 from .resources import DeviceModel, KernelProfile
 from .scheduler import Schedule
-from .simulator import RoundCheckpoint, simulate
+from .simulator import EventCheckpoint, RoundCheckpoint, simulate
 
-__all__ = ["refine_order", "refined_schedule", "DeltaRoundEvaluator"]
+__all__ = ["refine_order", "refined_schedule", "DeltaEvaluator",
+           "DeltaRoundEvaluator"]
 
 
 class _FastRoundSim:
     """RoundSimulator with per-kernel profile data precomputed once.
 
-    Bit-identical arithmetic to :class:`RoundSimulator._simulate` —
+    Bit-identical arithmetic to :class:`RoundSimulator.simulate` —
     the same operations on the same floats in the same order — but
     demand dicts, per-unit block counts and per-block memory traffic
     are resolved to flat tuples a single time per kernel object, which
@@ -95,7 +111,11 @@ class _FastRoundSim:
         return v
 
     def _eff(self, occ: float, sat: float) -> float:
-        if self._sat_idx < 0 and not self.device.sat_dim:
+        # Mirrors DeviceModel.compute_efficiency/memory_efficiency
+        # exactly: a sat_dim that is not a tracked capacity dimension
+        # (_sat_idx < 0 covers both sat_dim == "" and sat_dim not in
+        # caps) carries no occupancy signal — run at peak.
+        if self._sat_idx < 0:
             return 1.0
         return min(1.0, occ / sat)
 
@@ -158,39 +178,344 @@ class _FastRoundSim:
         return total, ckpts
 
 
-class DeltaRoundEvaluator:
-    """Suffix re-simulation of locally modified orders under the
-    RoundSimulator, against a cached base order."""
+class _FastEventSim:
+    """EventSimulator with per-kernel profile data precomputed once.
+
+    Bit-identical arithmetic to :class:`EventSimulator.simulate` — the
+    same operations on the same floats in the same order — over flat
+    tuples instead of demand dicts and dataclasses.  Unit state is a
+    list ``[used, n_resident, cohorts, lam]`` (``used`` a list in
+    ``device.caps`` order); a cohort is a list ``[kernel, n_blocks,
+    frac_left, t_admit, inst_per_block, mem_per_block, demands,
+    inst * n_blocks, mem * n_blocks]`` — the two trailing work
+    products are refreshed on merge by the same multiplication the
+    reference performs inside ``recompute_rate``, so caching them
+    changes no float.  Produces and consumes the same
+    :class:`EventCheckpoint` format as the reference, so checkpoints
+    are interchangeable between the two implementations
+    (property-tested in ``tests/test_event_delta.py``).
+    """
+
+    _EPS = 1e-12
 
     def __init__(self, device: DeviceModel):
-        self.sim = _FastRoundSim(device)
+        self.device = device
+        self._dims = tuple(device.caps)
+        self._caps = tuple(device.cap(d) for d in self._dims)
+        self._sat_idx = (self._dims.index(device.sat_dim)
+                         if device.sat_dim in self._dims else -1)
+        self._crate = device.compute_rate
+        self._mbw = device.mem_bw
+        self._satc = device.sat_compute
+        self._satm = device.sat_memory
+        self._info: dict[int, tuple] = {}
+
+    def _kinfo(self, k: KernelProfile) -> tuple:
+        v = self._info.get(id(k))
+        if v is None:
+            v = (k, tuple(k.demands[d] for d in self._dims),
+                 k.n_blocks, k.inst_per_block, k.mem_per_block())
+            self._info[id(k)] = v
+        return v
+
+    def _eff(self, occ: float, sat: float) -> float:
+        if self._sat_idx < 0:
+            return 1.0
+        return min(1.0, occ / sat)
+
+    def _rate(self, u: list) -> None:
+        cohorts = u[2]
+        if not cohorts:
+            u[3] = 0.0
+            return
+        eps = self._EPS
+        # sum() over a list is the same left fold (0 + x0 + x1 + ...)
+        # as the reference's generator sum — identical floats.
+        sum_c = sum([c[7] for c in cohorts])
+        sum_m = sum([c[8] for c in cohorts])
+        si = self._sat_idx
+        if si < 0:
+            eff_c = eff_m = 1.0
+        else:
+            occ = u[0][si]
+            eff_c = max(min(1.0, occ / self._satc), eps)
+            eff_m = max(min(1.0, occ / self._satm), eps)
+        u[3] = min(self._crate * eff_c / max(sum_c, eps),
+                   self._mbw * eff_m / max(sum_m, eps))
+
+    def simulate(self, order: Sequence[KernelProfile],
+                 start_state: EventCheckpoint | None = None,
+                 record: bool = False
+                 ) -> tuple[float, list[EventCheckpoint]]:
+        dev = self.device
+        dims_n = len(self._dims)
+        caps = self._caps
+        eps = self._EPS
+        n_units = dev.n_units
+        max_res = dev.max_resident
+        if start_state is None:
+            units = [[[0.0] * dims_n, 0, [], 0.0] for _ in range(n_units)]
+            start_pos, rr, t = 0, 0, 0.0
+        else:
+            units = []
+            for used, n_res, cohorts in start_state.units:
+                cs = []
+                for k, nb, fl, ta in cohorts:
+                    _, dem, _, inst_b, mem_b = self._kinfo(k)
+                    cs.append([k, nb, fl, ta, inst_b, mem_b, dem,
+                               inst_b * nb, mem_b * nb])
+                u = [list(used), n_res, cs, 0.0]
+                self._rate(u)
+                units.append(u)
+            start_pos, rr, t = (start_state.pos, start_state.rr,
+                                start_state.time)
+        # Strict-FIFO queue of [kernel, blocks left, pos, dem, inst, mem].
+        pending: list[list] = []
+        for p in range(start_pos, len(order)):
+            k = order[p]
+            _, dem, nb, inst_b, mem_b = self._kinfo(k)
+            pending.append([k, nb, p, dem, inst_b, mem_b])
+        head = 0
+        n_pend = len(pending)
+        ckpts: list[EventCheckpoint] = []
+        next_ckpt = start_pos
+        # Total resident blocks across units: an integer mirror of
+        # "any unit has cohorts", maintained incrementally so the event
+        # loop avoids a per-event generator scan.
+        n_res_total = sum(u[1] for u in units)
+
+        def snapshot(pos: int, blocks_left: int) -> EventCheckpoint:
+            return EventCheckpoint(
+                pos=pos, blocks_left=blocks_left, time=t, rr=rr,
+                units=tuple((tuple(u[0]), u[1],
+                             tuple((c[0], c[1], c[2], c[3])
+                                   for c in u[2]))
+                            for u in units))
+
+        def try_admit(pending=pending, units=units, caps=caps,
+                      dims_r=range(dims_n), units_r=range(n_units),
+                      n_units=n_units, max_res=max_res, eps=eps,
+                      record=record, rate=self._rate) -> None:
+            # Closure-invariant state is bound as defaults (LOAD_FAST)
+            # — this function dominates the suffix re-simulation cost.
+            nonlocal rr, head, next_ckpt, n_res_total
+            touched: set[int] = set()
+            # Within one call, per-unit capacity only shrinks, so a
+            # unit that rejected the current head kernel rejects it for
+            # the rest of the call: remember and skip (first-fit order
+            # is unchanged — skipped units would reject again).
+            cur_k = None
+            rejected: set[int] = set()
+            while head < n_pend:
+                e = pending[head]
+                k, pos, dem = e[0], e[2], e[3]
+                if k is not cur_k:
+                    cur_k = k
+                    rejected = set()
+                if record and pos == next_ckpt:
+                    ckpts.append(snapshot(pos, e[1]))
+                    next_ckpt = pos + 1
+                placed = False
+                for off in units_r:
+                    ui = rr + off
+                    if ui >= n_units:
+                        ui -= n_units
+                    if ui in rejected:
+                        continue
+                    u = units[ui]
+                    if u[1] + 1 > max_res:
+                        rejected.add(ui)
+                        continue
+                    used = u[0]
+                    ok = True
+                    for di in dims_r:
+                        if not used[di] + dem[di] <= caps[di] + eps:
+                            ok = False
+                            break
+                    if not ok:
+                        rejected.add(ui)
+                        continue
+                    for di in dims_r:
+                        used[di] += dem[di]
+                    u[1] += 1
+                    n_res_total += 1
+                    # Merge only into a same-instant cohort; scanned in
+                    # reverse because a (kernel, instant) cohort is
+                    # unique per unit and recent cohorts sit at the
+                    # tail.  The work products (c[7], c[8]) are
+                    # refreshed by the same multiplication the
+                    # reference's recompute_rate performs.
+                    for c in reversed(u[2]):
+                        if c[0] is k and c[3] == t:
+                            c[1] += 1
+                            c[7] = c[4] * c[1]
+                            c[8] = c[5] * c[1]
+                            break
+                    else:
+                        u[2].append([k, 1, 1.0, t, e[4], e[5], dem,
+                                     e[4], e[5]])
+                    touched.add(ui)
+                    rr = ui + 1
+                    if rr >= n_units:
+                        rr -= n_units
+                    e[1] -= 1
+                    if e[1] == 0:
+                        head += 1
+                    placed = True
+                    break
+                if not placed:
+                    break  # head blocks the queue (strict FIFO)
+            for ui in touched:
+                rate(units[ui])
+
+        try_admit()
+        guard = 0
+        while head < n_pend or n_res_total:
+            guard += 1
+            if guard > 1_000_000:
+                raise RuntimeError("_FastEventSim failed to converge")
+            if not n_res_total:
+                # Oversized head runs alone (see EventSimulator).
+                e = pending[head]
+                head += 1
+                nb, dem, inst_b, mem_b = e[1], e[3], e[4], e[5]
+                occ = dem[self._sat_idx] if self._sat_idx >= 0 else 0.0
+                eff_c = max(self._eff(occ, dev.sat_compute), eps)
+                eff_m = max(self._eff(occ, dev.sat_memory), eps)
+                t1 = max(inst_b / (dev.compute_rate * eff_c),
+                         mem_b / (dev.mem_bw * eff_m))
+                for _ in range(math.ceil(nb / n_units)):
+                    t += t1
+                try_admit()
+                continue
+            dt = min([c[2] / u[3] for u in units if u[2] for c in u[2]])
+            t += dt
+            freed = False
+            for u in units:
+                cohorts = u[2]
+                if not cohorts:
+                    continue
+                lam = u[3]
+                done = []
+                for c in cohorts:
+                    c[2] -= lam * dt
+                    if c[2] <= 1e-9:
+                        done.append(c)
+                if done:
+                    freed = True
+                    used = u[0]
+                    for c in done:
+                        cohorts.remove(c)
+                        dem, nb = c[6], c[1]
+                        for di in range(dims_n):
+                            used[di] -= dem[di] * nb
+                        u[1] -= nb
+                        n_res_total -= nb
+                    self._rate(u)
+            if freed:
+                try_admit()
+        return t, ckpts
+
+
+class DeltaEvaluator:
+    """Suffix re-simulation of locally modified orders against a
+    cached base order, generic over the timing model.
+
+    ``model="round"`` caches :class:`RoundCheckpoint` round boundaries
+    (one per round; a checkpoint at position p is usable for candidates
+    changed strictly after p, because the round that closed at p did so
+    by examining the old kernel there).  ``model="event"`` caches one
+    :class:`EventCheckpoint` per order position, captured before any
+    block of that position is dispatched — so the checkpoint *at* the
+    first changed position is itself usable, and every move resumes
+    from the latest possible dispatcher state.
+    """
+
+    def __init__(self, device: DeviceModel, model: str = "round"):
+        if model == "round":
+            self.sim: _FastRoundSim | _FastEventSim = _FastRoundSim(device)
+        elif model == "event":
+            self.sim = _FastEventSim(device)
+        else:
+            raise ValueError(f"unknown model {model!r} "
+                             "(expected 'round' or 'event')")
+        self.model = model
         self._base: list[KernelProfile] = []
-        self._ckpts: list[RoundCheckpoint] = []
+        self._ckpts: list = []
         self._total = 0.0
 
     def rebase(self, order: Sequence[KernelProfile]) -> float:
-        """Full simulation of ``order``; caches its round checkpoints."""
+        """Full simulation of ``order``; caches its checkpoints."""
         self._base = list(order)
         self._total, self._ckpts = self.sim.simulate(self._base,
                                                      record=True)
         return self._total
 
+    def rebase_incremental(self, order: Sequence[KernelProfile],
+                           first_changed: int) -> float:
+        """Rebase onto ``order``, which must equal the current base at
+        every position < ``first_changed`` (an accepted local move).
+
+        The checkpoint prefix before the resume point is still valid
+        for the new base — the simulation up to it examined only
+        unchanged positions — so only the suffix is re-simulated with
+        recording and the two checkpoint lists are stitched.  Produces
+        bit-identical state to a full :meth:`rebase` (property-tested)
+        at suffix cost, which keeps accepted moves as cheap as
+        evaluating them.
+        """
+        if self.model == "event":
+            if first_changed < len(self._ckpts):
+                cp = self._ckpts[first_changed]
+                t, suffix = self.sim.simulate(order, start_state=cp,
+                                              record=True)
+                self._base = list(order)
+                self._ckpts = self._ckpts[:first_changed] + suffix
+                self._total = t
+                return t
+            return self.rebase(order)
+        best: RoundCheckpoint | None = None
+        idx = 0
+        for i, cp in enumerate(self._ckpts):
+            if cp.pos < first_changed:
+                best, idx = cp, i
+            else:
+                break
+        if best is None:
+            return self.rebase(order)
+        t, suffix = self.sim.simulate(order, start_pos=best.pos,
+                                      head_blocks=best.blocks_left,
+                                      t0=best.time, record=True)
+        self._base = list(order)
+        self._ckpts = self._ckpts[:idx] + suffix
+        self._total = t
+        return t
+
     def evaluate(self, cand: Sequence[KernelProfile],
                  first_changed: int) -> float:
         """Time of ``cand``, which must equal the base order at every
-        position < ``first_changed``.  Equal to
-        ``RoundSimulator.simulate(cand)`` exactly."""
+        position < ``first_changed``.  Exactly equal to a full
+        re-simulation of ``cand`` under the evaluator's model."""
         return self.evaluate_costed(cand, first_changed)[0]
 
     def evaluate_costed(self, cand: Sequence[KernelProfile],
                         first_changed: int) -> tuple[float, float]:
         """As :meth:`evaluate`, plus the evaluation's cost as a
         fraction of a full re-simulation (suffix length / n)."""
-        # Only checkpoints strictly before the first changed position
-        # are safe: the round preceding a checkpoint at position p
-        # closed by examining the kernel at p (failed or partial
-        # admission), so a checkpoint at p == first_changed encodes a
-        # decision taken against the *old* kernel there.
+        if self.model == "event":
+            # One checkpoint per position, captured before any block
+            # of that position was dispatched: the checkpoint at
+            # first_changed depends only on earlier positions.
+            if first_changed < len(self._ckpts):
+                cp = self._ckpts[first_changed]
+                frac = (len(cand) - cp.pos) / max(len(cand), 1)
+                return self.sim.simulate(cand, start_state=cp)[0], frac
+            return self.sim.simulate(cand)[0], 1.0
+        # Round model: only checkpoints strictly before the first
+        # changed position are safe — the round preceding a checkpoint
+        # at position p closed by examining the kernel at p (failed or
+        # partial admission), so a checkpoint at p == first_changed
+        # encodes a decision taken against the *old* kernel there.
         best: RoundCheckpoint | None = None
         for cp in self._ckpts:
             if cp.pos < first_changed:
@@ -205,9 +530,24 @@ class DeltaRoundEvaluator:
                               t0=best.time)[0]
         return t, frac
 
-    def round_boundaries(self) -> list[int]:
-        """Order positions at which the base's rounds open."""
+    def boundaries(self) -> list[int] | None:
+        """Admission-boundary positions of the base order, or ``None``
+        when every position is one (event model)."""
+        if self.model == "event":
+            return None
         return [cp.pos for cp in self._ckpts]
+
+    def round_boundaries(self) -> list[int]:
+        """Order positions at which the base's rounds open (round
+        model; kept for backward compatibility)."""
+        return [cp.pos for cp in self._ckpts]
+
+
+class DeltaRoundEvaluator(DeltaEvaluator):
+    """Backward-compatible alias: the round-model delta evaluator."""
+
+    def __init__(self, device: DeviceModel):
+        super().__init__(device, model="round")
 
 
 def _moves(n: int, neighborhood: str) -> list[tuple[int, str, int, int]]:
@@ -256,9 +596,10 @@ def refine_order(
 ) -> tuple[list[KernelProfile], float, int]:
     """Hill-climb ``order`` under ``time_fn``.
 
-    With the default ``time_fn`` and ``model="round"``, candidates are
-    delta-evaluated (suffix re-simulation); any custom ``time_fn`` or
-    the event model falls back to full evaluation per candidate.
+    With the default ``time_fn``, candidates are delta-evaluated
+    (suffix re-simulation from cached admission checkpoints) under
+    both built-in models — ``model="round"`` and ``model="event"``;
+    any custom ``time_fn`` falls back to full evaluation per candidate.
 
     ``budget`` is charged in *full-simulation equivalents*: a delta
     evaluation that re-simulates only the last k of n positions costs
@@ -272,9 +613,10 @@ def refine_order(
     only moves that straddle a round boundary of the incumbent order
     can change round composition under the round model, so they are
     evaluated before intra-round shuffles, cheapest (latest suffix)
-    first within each class.  The "full" move set keeps plain
-    enumeration order so the delta path retraces the reference
-    trajectory exactly.
+    first within each class.  Under the event model every position is
+    an admission boundary, so moves are simply tried cheapest first.
+    The "full" move set keeps plain enumeration order so the delta
+    path retraces the reference trajectory exactly.
 
     Returns ``(best_order, best_time, evaluations_used)``.
     """
@@ -285,8 +627,8 @@ def refine_order(
         # spread a small budget across every round boundary instead of
         # burning it on early-position swaps.
         neighborhood = "full" if n <= 128 else "adjacent"
-    use_delta = time_fn is None and model == "round"
-    delta = DeltaRoundEvaluator(device) if use_delta else None
+    use_delta = time_fn is None and model in ("round", "event")
+    delta = DeltaEvaluator(device, model=model) if use_delta else None
     if time_fn is None:
         time_fn = lambda o: simulate(o, device, model=model)  # noqa: E731
     best = list(order)
@@ -299,13 +641,19 @@ def refine_order(
         improved = False
         moves = _moves(n, neighborhood)
         if use_delta and neighborhood == "adjacent":
-            near = [False] * (n + 1)
-            for b in delta.round_boundaries():
-                for p in (b - 1, b, b + 1):
-                    if 0 <= p < n:
-                        near[p] = True
-            moves.sort(key=lambda m: (not (near[m[2]] or near[m[3]]),
-                                      -m[0]))
+            bounds = delta.boundaries()
+            if bounds is None:
+                # Event model: every position is a boundary — try the
+                # cheapest (latest-suffix) moves first.
+                moves.sort(key=lambda m: -m[0])
+            else:
+                near = [False] * (n + 1)
+                for b in bounds:
+                    for p in (b - 1, b, b + 1):
+                        if 0 <= p < n:
+                            near[p] = True
+                moves.sort(key=lambda m: (not (near[m[2]] or near[m[3]]),
+                                          -m[0]))
         for first, kind, i, j in moves:
             if cost >= budget or evals >= eval_cap:
                 break
@@ -325,8 +673,11 @@ def refine_order(
                     # set the delta path's cumulative cost is <= the
                     # reference's at every trajectory point — it
                     # retraces the reference trajectory and then keeps
-                    # going, guaranteeing a result no worse.
-                    delta.rebase(best)
+                    # going, guaranteeing a result no worse.  The
+                    # incremental rebase stitches the still-valid
+                    # checkpoint prefix with a recorded suffix re-sim,
+                    # so acceptance costs no more than evaluation did.
+                    delta.rebase_incremental(best, first)
     return best, best_t, evals
 
 

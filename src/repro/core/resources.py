@@ -95,13 +95,22 @@ class DeviceModel:
     def _occupancy(self, used: Mapping[str, float]) -> float:
         return used.get(self.sat_dim, 0.0) if self.sat_dim else float("inf")
 
+    def _has_occupancy_model(self) -> bool:
+        # A sat_dim that is not a tracked capacity can never accumulate
+        # occupancy, so treating it as an occupancy model would pin
+        # every efficiency at 0 (~1e12x slowdowns).  Such a device has
+        # no usable occupancy signal: run at peak.  Mirrored exactly by
+        # the vectorized simulators (repro.core.refine) and pinned by
+        # tests/test_fastscore.py::test_sat_dim_configs_match_reference.
+        return bool(self.sat_dim) and self.sat_dim in self.caps
+
     def compute_efficiency(self, used: Mapping[str, float]) -> float:
-        if not self.sat_dim:
+        if not self._has_occupancy_model():
             return 1.0
         return min(1.0, self._occupancy(used) / self.sat_compute)
 
     def memory_efficiency(self, used: Mapping[str, float]) -> float:
-        if not self.sat_dim:
+        if not self._has_occupancy_model():
             return 1.0
         return min(1.0, self._occupancy(used) / self.sat_memory)
 

@@ -16,22 +16,25 @@ permutation search are provided for design-space evaluation.
 
 Complexity / when to use which path
 -----------------------------------
-This module is the *reference* implementation: pure Python over
+This module is the **test-only oracle**: pure Python over
 ``KernelProfile`` objects, kept deliberately close to the paper's
-pseudocode so it can serve as the oracle in property tests.  Each
-round re-scans the remaining pairs (``O(n^2)`` ``pair_score`` calls
-per round, each building per-unit demand dicts), so a full schedule
-costs ``O(R * n^2)`` scored pairs — ``O(n^3)`` and beyond in wall
-time.  Fine up to a few dozen kernels.
+pseudocode so property tests can diff the production path against it.
+Each round re-scans the remaining pairs (``O(n^2)`` ``pair_score``
+calls per round, each building per-unit demand dicts), so a full
+schedule costs ``O(R * n^2)`` scored pairs — ``O(n^3)`` and beyond in
+wall time: minutes at ``n = 1024`` (``BENCH_scheduler_scaling.json``).
 
 :mod:`repro.core.fastscore` is the production path: it packs profiles
 into NumPy arrays once, computes the pairwise matrix a single time
 with broadcasting (``O(n^2 * D)``), and maintains only the 1xn score
 vector of the current round's combined profile between absorptions
 (``O(n * D)`` per absorption), for ``O(n^2 * D)`` total.  It produces
-*identical* schedules (verified in ``tests/test_fastscore.py``); use
-it whenever ``n`` exceeds ~16 or scheduling sits on a serving hot
-path.
+*identical* schedules (verified in ``tests/test_fastscore.py``).
+Every non-test caller — the serving engine, the TPU round composer,
+the train-side overlap scheduler, the examples and the paper-figure
+benchmarks — goes through ``fastscore.greedy_order_fast``; new code
+should never call :func:`greedy_order` outside a test or an explicit
+oracle comparison (``benchmarks/scaling.py``'s reference path).
 """
 
 from __future__ import annotations
@@ -101,7 +104,12 @@ class Schedule:
 
 def greedy_order(kernels: Sequence[KernelProfile],
                  device: DeviceModel) -> Schedule:
-    """Algorithm 1 of the paper."""
+    """Algorithm 1 of the paper — test-only oracle.
+
+    Production callers use :func:`repro.core.fastscore.greedy_order_fast`,
+    which is property-tested to produce identical schedules in
+    ``O(n^2 * D)`` instead of ``O(R * n^2)`` Python ScoreGen reruns.
+    """
     remaining = list(kernels)
     rounds: list[Round] = []
     while remaining:

@@ -27,10 +27,19 @@
 
 Both models charge a block's compute and memory work concurrently
 (within-block overlap), so a kernel alone runs at its roofline time.
+
+Both models are *checkpointable*: they can record their full dispatcher
+state at admission boundaries (:class:`RoundCheckpoint` /
+:class:`EventCheckpoint`) and resume a simulation from a recorded
+checkpoint.  A candidate order that agrees with the recorded order on
+every position before the checkpoint replays the identical float
+accumulation from there on, which is what makes suffix re-simulation
+(:class:`repro.core.refine.DeltaEvaluator`) exact.
 """
 
 from __future__ import annotations
 
+import math
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Sequence
@@ -38,7 +47,7 @@ from typing import Sequence
 from .resources import DeviceModel, KernelProfile
 
 __all__ = ["RoundSimulator", "RoundCheckpoint", "EventSimulator",
-           "simulate"]
+           "EventCheckpoint", "simulate"]
 
 _EPS = 1e-12
 
@@ -54,7 +63,7 @@ class RoundCheckpoint:
     A candidate order that only differs from the recorded one at
     positions >= p can resume from the latest checkpoint whose
     consumed prefix lies strictly before p (produced and consumed by
-    :class:`repro.core.refine.DeltaRoundEvaluator`).
+    :class:`repro.core.refine.DeltaEvaluator`).
     """
 
     pos: int
@@ -66,7 +75,7 @@ class RoundCheckpoint:
 class RoundSimulator:
     """Reference round model, kept deliberately simple: it is the
     oracle the optimized delta evaluator
-    (:class:`repro.core.refine.DeltaRoundEvaluator`) is
+    (:class:`repro.core.refine.DeltaEvaluator`) is
     property-tested against for exact equality."""
 
     device: DeviceModel
@@ -113,11 +122,20 @@ class RoundSimulator:
 
 @dataclass
 class _Cohort:
-    """Blocks of one kernel admitted to one unit at the same instant."""
+    """Blocks of one kernel admitted to one unit at the same instant.
+
+    ``t_admit`` tags the admission instant: blocks only merge into a
+    cohort admitted at the *same* simulation time.  (Merging on
+    ``frac_left == 1.0`` alone — the pre-fix behaviour — let a block
+    admitted at a later instant join an old cohort whose progress had
+    underflowed to zero, violating the same-instant invariant and
+    making checkpoint resume non-reproducible.)
+    """
 
     kernel: KernelProfile
     n_blocks: int
     frac_left: float = 1.0
+    t_admit: float = 0.0
 
 
 @dataclass
@@ -139,17 +157,101 @@ class _Unit:
                        dev.mem_bw * eff_m / max(sum_m, _EPS))
 
 
+@dataclass(frozen=True)
+class EventCheckpoint:
+    """Full dispatcher state at the instant the event-model dispatcher
+    first examines the kernel at order position ``pos``.
+
+    At that instant no block of position ``pos`` has been placed
+    (``blocks_left`` equals its full grid size), so the captured state
+    — per-unit ``used`` vectors, resident-block counts, cohort
+    fractions with their admission instants, the round-robin pointer
+    and the cumulative time — depends only on kernels at positions
+    ``< pos``.  A candidate order agreeing with the recorded one at
+    every position ``< first_changed`` can therefore resume from the
+    checkpoint at ``pos == first_changed`` (or any earlier one) and
+    replay the identical float accumulation.
+
+    ``units`` is a tuple with one entry per execution unit::
+
+        (used, n_resident, cohorts)
+
+    where ``used`` is a tuple of floats in ``device.caps`` order and
+    ``cohorts`` is a tuple of ``(kernel, n_blocks, frac_left,
+    t_admit)`` tuples.  Unit rates (``lam``) are derived state and are
+    recomputed on resume.
+    """
+
+    pos: int
+    blocks_left: int
+    time: float
+    rr: int
+    units: tuple
+
+    @staticmethod
+    def capture(pos: int, blocks_left: int, time: float, rr: int,
+                units: Sequence[_Unit], dims: Sequence[str]
+                ) -> "EventCheckpoint":
+        return EventCheckpoint(
+            pos=pos, blocks_left=blocks_left, time=time, rr=rr,
+            units=tuple(
+                (tuple(u.used[d] for d in dims), u.n_resident,
+                 tuple((c.kernel, c.n_blocks, c.frac_left, c.t_admit)
+                       for c in u.cohorts))
+                for u in units))
+
+
 @dataclass
 class EventSimulator:
+    """Reference event-driven per-unit dispatcher model.
+
+    This is the oracle implementation: deliberately dict-based and
+    close to the prose description above.  The optimized twin
+    (:class:`repro.core.refine._FastEventSim`) replays the identical
+    arithmetic over pre-resolved tuples and is property-tested against
+    this class for exact float equality, full runs and checkpoint
+    resumes alike.
+    """
+
     device: DeviceModel
 
-    def simulate(self, order: Sequence[KernelProfile]) -> float:
+    def simulate(self, order: Sequence[KernelProfile], *,
+                 start_state: EventCheckpoint | None = None,
+                 record: bool = False):
+        """Execution time of ``order``.
+
+        ``start_state`` resumes from a previously recorded
+        :class:`EventCheckpoint`; ``order`` must agree with the
+        checkpoint's source order at every position before
+        ``start_state.pos`` (positions from there on are re-dispatched
+        with their full block counts, so the kernel *at*
+        ``start_state.pos`` may differ).  With ``record=True`` returns
+        ``(time, checkpoints)`` — one checkpoint per order position,
+        captured the first time the dispatcher examines it; otherwise
+        returns the time alone.
+        """
         dev = self.device
-        units = [_Unit(used={d: 0.0 for d in dev.caps})
-                 for _ in range(dev.n_units)]
-        # Strict-FIFO dispatch queue of [kernel, blocks left to place].
-        pending: deque[list] = deque([k, k.n_blocks] for k in order)
-        rr = 0  # round-robin dispatch pointer
+        dims = tuple(dev.caps)
+        if start_state is None:
+            units = [_Unit(used={d: 0.0 for d in dims})
+                     for _ in range(dev.n_units)]
+            start_pos, rr, t = 0, 0, 0.0
+        else:
+            units = []
+            for used, n_res, cohorts in start_state.units:
+                u = _Unit(used=dict(zip(dims, used)), n_resident=n_res,
+                          cohorts=[_Cohort(k, nb, fl, ta)
+                                   for k, nb, fl, ta in cohorts])
+                u.recompute_rate(dev)
+                units.append(u)
+            start_pos, rr, t = (start_state.pos, start_state.rr,
+                                start_state.time)
+        # Strict-FIFO dispatch queue of [kernel, blocks left, position].
+        pending: deque[list] = deque(
+            [order[p], order[p].n_blocks, p]
+            for p in range(start_pos, len(order)))
+        ckpts: list[EventCheckpoint] = []
+        next_ckpt = start_pos  # first order position not yet examined
 
         def fits(u: _Unit, k: KernelProfile) -> bool:
             if u.n_resident + 1 > dev.max_resident:
@@ -158,10 +260,18 @@ class EventSimulator:
                        for dim in dev.caps)
 
         def try_admit() -> None:
-            nonlocal rr
+            nonlocal rr, next_ckpt
             touched: set[int] = set()
             while pending:
-                k, _ = pending[0]
+                k, _, pos = pending[0]
+                if record and pos == next_ckpt:
+                    # First examination of position ``pos``: no block
+                    # of it placed yet, state depends only on earlier
+                    # positions — the admission boundary a suffix
+                    # re-simulation can resume from.
+                    ckpts.append(EventCheckpoint.capture(
+                        pos, pending[0][1], t, rr, units, dims))
+                    next_ckpt = pos + 1
                 placed = False
                 for off in range(dev.n_units):
                     ui = (rr + off) % dev.n_units
@@ -170,13 +280,14 @@ class EventSimulator:
                         for dim in dev.caps:
                             u.used[dim] += k.demands[dim]
                         u.n_resident += 1
-                        # Merge into a same-instant cohort if present.
+                        # Merge only into a cohort admitted at this
+                        # same instant (see _Cohort.t_admit).
                         for c in u.cohorts:
-                            if c.kernel is k and c.frac_left == 1.0:
+                            if c.kernel is k and c.t_admit == t:
                                 c.n_blocks += 1
                                 break
                         else:
-                            u.cohorts.append(_Cohort(k, 1))
+                            u.cohorts.append(_Cohort(k, 1, t_admit=t))
                         touched.add(ui)
                         rr = (ui + 1) % dev.n_units
                         pending[0][1] -= 1
@@ -190,19 +301,26 @@ class EventSimulator:
                 units[ui].recompute_rate(dev)
 
         try_admit()
-        t = 0.0
         guard = 0
         while any(u.cohorts for u in units) or pending:
             guard += 1
             if guard > 1_000_000:
                 raise RuntimeError("EventSimulator failed to converge")
             if not any(u.cohorts for u in units):
-                # Head block larger than an empty unit: force it through
-                # alone at whatever occupancy it achieves (degenerate).
-                k, nb = pending.popleft()
-                t += nb / dev.n_units * max(
-                    k.inst_per_block / dev.compute_rate,
-                    k.mem_per_block() / dev.mem_bw)
+                # Head block larger than an empty unit: it runs alone,
+                # one block per unit per pass, at the occupancy a
+                # single resident block achieves — the same
+                # "oversized block runs alone" rule (and the same
+                # float accumulation) as RoundSimulator's forced
+                # single-block rounds.
+                k, nb, pos = pending.popleft()
+                used1 = {dim: k.demands[dim] for dim in dev.caps}
+                eff_c = max(dev.compute_efficiency(used1), _EPS)
+                eff_m = max(dev.memory_efficiency(used1), _EPS)
+                t1 = max(k.inst_per_block / (dev.compute_rate * eff_c),
+                         k.mem_per_block() / (dev.mem_bw * eff_m))
+                for _ in range(math.ceil(nb / dev.n_units)):
+                    t += t1
                 try_admit()
                 continue
             dt = min(c.frac_left / u.lam
@@ -227,6 +345,8 @@ class EventSimulator:
                     u.recompute_rate(dev)
             if freed:
                 try_admit()
+        if record:
+            return t, ckpts
         return t
 
 

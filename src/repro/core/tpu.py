@@ -188,6 +188,9 @@ def compose_rounds(items: Sequence[TpuWorkItem],
     ``method="reference"`` in ``O(n^2)`` instead of ``O(R * n^2)``
     Python-level ScoreGen reruns — the difference between microseconds
     and seconds per serving step at production queue depths.
+    ``method="reference"`` runs the pure-Python test-only oracle and
+    exists solely for equivalence checks; no production caller should
+    select it.
     """
     device = device or make_serving_device()
     profiles = [it.profile() for it in items]

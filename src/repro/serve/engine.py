@@ -21,7 +21,7 @@ simulator so the ordering gain is measurable (see
 
 from __future__ import annotations
 
-from collections import OrderedDict, deque
+from collections import Counter, OrderedDict, deque
 from dataclasses import dataclass, field
 
 import jax
@@ -29,7 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import Schedule
-from repro.core.fastscore import greedy_order_fast
+from repro.core.fastscore import greedy_order_fast, warm_start_insert
 from repro.core.refine import refine_order
 from repro.core.tpu import (TpuWorkItem, decode_profile, fifo_rounds,
                             make_serving_device, prefill_profile,
@@ -58,10 +58,22 @@ class SchedulerPolicy:
     refine_budget: int = 200
     #: local-search move set for kind="refined" (see repro.core.refine)
     neighborhood: str = "auto"
+    #: objective for kind="refined": "rounds" re-rounds every candidate
+    #: under the TPU round cost model (weight stream charged once per
+    #: round); "event" / "round" refine the flat launch order under the
+    #: corresponding core simulator, delta-evaluated via the
+    #: checkpointing :class:`repro.core.refine.DeltaEvaluator` — the
+    #: suffix re-simulation path that makes event-model refinement
+    #: affordable on the serving hot path.
+    refine_model: str = "rounds"
     #: ScheduleCache: reuse round compositions across steps whose
     #: work-item mix is equivalent (decode kv-lens bucketized).
     cache: bool = True
     kv_bucket: int = 256
+    #: On a cache near-miss (exactly one request joined or left the
+    #: mix since a cached step), adapt the cached composition instead
+    #: of recomputing greedy + guard + refine from scratch.
+    warm_start: bool = True
 
 
 #: Work-item signature: what makes two items schedule-equivalent.
@@ -92,6 +104,10 @@ class ScheduleCache:
         self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
+        #: near-miss adaptations that seeded a composition (see
+        #: :meth:`near_miss`); every warm hit is also counted a miss,
+        #: since :meth:`lookup` failed first.
+        self.warm_hits = 0
         self._store: OrderedDict[tuple, tuple[tuple[Signature, ...], ...]] \
             = OrderedDict()
 
@@ -116,8 +132,39 @@ class ScheduleCache:
     def store(self, key: tuple,
               pattern: tuple[tuple[Signature, ...], ...]) -> None:
         self._store[key] = pattern
+        # Assigning to an existing key does NOT reorder an OrderedDict:
+        # without this, a refreshed entry keeps its stale position and
+        # is evicted as if it were never re-stored.
+        self._store.move_to_end(key)
         if len(self._store) > self.max_entries:
             self._store.popitem(last=False)
+
+    def near_miss(self, key: tuple):
+        """Cached entry whose signature multiset differs from ``key``
+        by exactly one occurrence — one request joined or one left the
+        mix since the cached step.
+
+        ``key`` must have the engine's shape ``(kind, sigs)`` with
+        ``sigs`` the sorted signature tuple from :meth:`key_of`.
+        Returns ``(pattern, added, removed)`` — ``added`` the
+        signatures present now but not in the cached mix (the joined
+        request), ``removed`` the cached-only ones (the departed
+        request) — or ``None``.  Most recently used entries are
+        preferred.  Does not bump hit counters: callers count
+        ``warm_hits`` only when the adaptation is actually used.
+        """
+        kind, sigs = key
+        want = Counter(sigs)
+        n = len(sigs)
+        for k2 in reversed(self._store):
+            if k2[0] != kind or k2 == key or abs(len(k2[1]) - n) != 1:
+                continue
+            have = Counter(k2[1])
+            added = list((want - have).elements())
+            removed = list((have - want).elements())
+            if len(added) + len(removed) == 1:
+                return self._store[k2], added, removed
+        return None
 
     @property
     def hit_rate(self) -> float:
@@ -126,6 +173,7 @@ class ScheduleCache:
 
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
+                "warm_hits": self.warm_hits,
                 "hit_rate": self.hit_rate, "entries": len(self._store)}
 
 
@@ -195,21 +243,38 @@ class ServingEngine:
             pattern = self.schedule_cache.lookup(key)
             if pattern is not None:
                 return self._apply_pattern(pattern, items, sigs)
+            if self.policy.warm_start:
+                warm = self.schedule_cache.near_miss(key)
+                if warm is not None:
+                    result = self._warm_adapt(warm, items, sigs)
+                    if result is not None:
+                        return self._cache_store(key, result, items, sigs)
         profs = [t[0].profile() for t in items]
         sched: Schedule = greedy_order_fast(profs, self.device)
         if self.policy.kind == "refined":
-            # local search over the flat order, re-rounded by greedy
-            # capacity packing under the simulator objective
-            def tfn(order_profs):
-                its = [by_name[p.name][0] for p in order_profs]
-                rds = fifo_rounds(its, self.device)
-                return sum(round_time(r, self.device, self.weights_bytes)
-                           for r in rds)
+            if self.policy.refine_model in ("event", "round"):
+                # flat-order refinement under the core simulator,
+                # delta-evaluated (suffix re-simulation from cached
+                # admission checkpoints), then re-rounded by capacity
+                order, _, _ = refine_order(
+                    sched.order, self.device,
+                    model=self.policy.refine_model,
+                    budget=self.policy.refine_budget,
+                    neighborhood=self.policy.neighborhood)
+            else:
+                # local search over the flat order, re-rounded by
+                # greedy capacity packing under the round cost model
+                def tfn(order_profs):
+                    its = [by_name[p.name][0] for p in order_profs]
+                    rds = fifo_rounds(its, self.device)
+                    return sum(round_time(r, self.device,
+                                          self.weights_bytes)
+                               for r in rds)
 
-            order, _, _ = refine_order(
-                sched.order, self.device, time_fn=tfn,
-                budget=self.policy.refine_budget,
-                neighborhood=self.policy.neighborhood)
+                order, _, _ = refine_order(
+                    sched.order, self.device, time_fn=tfn,
+                    budget=self.policy.refine_budget,
+                    neighborhood=self.policy.neighborhood)
             its = [by_name[p.name][0] for p in order]
             rounds = fifo_rounds(its, self.device)
             result = [[by_name[it.name] for it in rd] for rd in rounds]
@@ -250,6 +315,57 @@ class ServingEngine:
         for trip, s in zip(items, sigs):
             groups.setdefault(s, deque()).append(trip)
         return [[groups[s].popleft() for s in rd] for rd in pattern]
+
+    def _warm_adapt(self, warm, items, sigs):
+        """Seed this step's composition from a near-miss cached one.
+
+        One request left: drop its signature's occurrence from the
+        cached pattern and replay.  One request joined: replay the
+        pattern on the matching items, then place the newcomer into
+        the round Algorithm 1's own scoring picks
+        (:func:`repro.core.fastscore.warm_start_insert`).  The result
+        still passes the fifo cost-model guard; returns None when the
+        adaptation cannot be applied.
+        """
+        pattern, added, removed = warm
+        pat = [list(rd) for rd in pattern]
+        if removed:
+            s = removed[0]
+            for rd in pat:
+                if s in rd:
+                    rd.remove(s)
+                    break
+            pat = [rd for rd in pat if rd]
+        groups: dict[tuple[str, int], deque] = {}
+        for trip, s in zip(items, sigs):
+            groups.setdefault(s, deque()).append(trip)
+        if added:
+            extra = groups[added[0]].popleft()
+        try:
+            result = [[groups[s].popleft() for s in rd] for rd in pat]
+        except (KeyError, IndexError):
+            return None  # stale pattern shape: fall back to recompute
+        if added:
+            ri = warm_start_insert(
+                [[t[0].profile() for t in rd] for rd in result],
+                extra[0].profile(), self.device)
+            if ri >= 0:
+                result[ri].append(extra)
+            else:
+                result.append([extra])
+        # Same guard as the cold path: never accept a composition the
+        # round cost model says is worse than arrival order.
+        t_warm = sum(round_time([t[0] for t in rd], self.device,
+                                self.weights_bytes) for rd in result)
+        fifo = fifo_rounds([t[0] for t in items], self.device)
+        t_fifo = sum(round_time(r, self.device, self.weights_bytes)
+                     for r in fifo)
+        if t_fifo < t_warm:
+            by_name = {t[0].name: t for t in items}
+            result = [[by_name[it.name] for it in rd] for rd in fifo]
+        else:
+            self.schedule_cache.warm_hits += 1
+        return result
 
     # -- execution -------------------------------------------------------
     def submit(self, reqs: list[Request]) -> None:

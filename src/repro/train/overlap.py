@@ -19,7 +19,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Sequence
 
-from repro.core import DeviceModel, KernelProfile, greedy_order
+from repro.core import DeviceModel, KernelProfile, greedy_order_fast
 
 __all__ = ["CommTask", "ComputeTask", "make_overlap_device",
            "overlap_schedule", "exposed_comm_time"]
@@ -69,7 +69,7 @@ def overlap_schedule(tasks: Sequence, device: DeviceModel | None = None
     """Launch order (task names) from Algorithm 1."""
     device = device or make_overlap_device()
     profs = [_profile(t, device) for t in tasks]
-    sched = greedy_order(profs, device)
+    sched = greedy_order_fast(profs, device)
     return [k.name for k in sched.order]
 
 

@@ -1,0 +1,323 @@
+"""Property tests for the checkpointable EventSimulator and the
+event-model delta evaluator: exact float equality between suffix
+re-simulation and full re-simulation, checkpoint interchangeability
+between the reference and fast implementations, the cohort same-instant
+invariant, and the oversized-block consistency pin against the round
+model.
+
+Written with plain ``random`` (no hypothesis dependency in the pinned
+toolchain) over seeded draws, so failures reproduce exactly.
+"""
+
+import random
+
+import pytest
+
+from repro.core import (GTX580, DeviceModel, EventSimulator, KernelProfile,
+                        RoundSimulator, simulate)
+from repro.core.refine import DeltaEvaluator, _FastEventSim, refine_order
+from repro.core.resources import bs_kernel, ep_kernel, es_kernel, sw_kernel
+from repro.core.tpu import (decode_profile, make_serving_device,
+                            prefill_profile)
+
+_FAMS = [ep_kernel, bs_kernel, es_kernel, sw_kernel]
+_TPU = make_serving_device()
+
+
+def _gpu_kernels(rng: random.Random, n: int) -> list[KernelProfile]:
+    return [rng.choice(_FAMS)(f"k{i}",
+                              grid=rng.choice([8, 16, 32, 48, 64, 96]),
+                              shm=rng.choice([0, 4096, 8192, 16384, 24576]),
+                              inst=rng.uniform(1e6, 5e8))
+            for i in range(n)]
+
+
+def _tpu_profiles(rng: random.Random, n: int) -> list[KernelProfile]:
+    items = []
+    for i in range(n):
+        if rng.random() < 0.4:
+            items.append(prefill_profile(
+                f"p{i}", n_params=7e9,
+                seq_len=rng.choice([128, 256, 512, 1024]),
+                kv_bytes_per_token=131072))
+        else:
+            items.append(decode_profile(
+                f"d{i}", n_params=7e9, kv_len=rng.randint(1, 8192),
+                kv_bytes_per_token=131072))
+    return [it.profile() for it in items]
+
+
+def _adversarial(rng: random.Random, n: int) -> list[KernelProfile]:
+    """Profiles engineered to hit the simulator's edge paths: oversized
+    blocks (degenerate solo execution), near-capacity fits, extreme
+    intensities spanning 12 orders of magnitude, and single-block
+    grids."""
+    ks = []
+    for i in range(n):
+        roll = rng.random()
+        if roll < 0.2:
+            # oversized in one dimension: forces the degenerate path
+            dem = {"shm": rng.choice([49152.0, 96000.0]),
+                   "reg": rng.uniform(100, 3000.0), "warp": 4.0}
+        elif roll < 0.4:
+            # exactly at capacity: fits alone, nothing else joins
+            dem = {"shm": 48 * 1024.0, "reg": 1024.0, "warp": 48.0}
+        else:
+            dem = {"shm": rng.choice([0.0, 8192.0]),
+                   "reg": rng.uniform(512, 8192.0),
+                   "warp": float(rng.choice([1, 4, 8, 16]))}
+        ks.append(KernelProfile(
+            f"a{i}", n_blocks=rng.choice([1, 3, 7, 17, 33]),
+            demands=dem, inst_per_block=rng.uniform(1e2, 1e9),
+            r=rng.choice([1e-6, 0.5, 4.0, 1e6])))
+    return ks
+
+
+def _moves(rng: random.Random, ks: list, n_moves: int):
+    n = len(ks)
+    for _ in range(n_moves):
+        i, j = rng.randrange(n), rng.randrange(n)
+        if i == j:
+            continue
+        cand = list(ks)
+        cand[i], cand[j] = cand[j], cand[i]
+        yield cand, min(i, j)
+        cand = list(ks)
+        cand.insert(j, cand.pop(i))
+        yield cand, min(i, j)
+
+
+# --------------------------------------------------------------------------
+# fast event sim == reference event sim (full runs)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("device,maker", [(GTX580, _gpu_kernels),
+                                          (_TPU, _tpu_profiles),
+                                          (GTX580, _adversarial)])
+def test_fast_event_sim_matches_reference(device, maker):
+    rng = random.Random(13)
+    fast = _FastEventSim(device)
+    ref = EventSimulator(device)
+    for _ in range(15):
+        ks = maker(rng, rng.randint(1, 20))
+        assert fast.simulate(ks)[0] == ref.simulate(ks)
+
+
+# --------------------------------------------------------------------------
+# checkpoint resume == full simulation, both implementations, both ways
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("maker", [_gpu_kernels, _adversarial])
+def test_checkpoint_resume_equals_full(maker):
+    rng = random.Random(7)
+    ref = EventSimulator(GTX580)
+    fast = _FastEventSim(GTX580)
+    for _ in range(8):
+        ks = maker(rng, rng.randint(2, 14))
+        n = len(ks)
+        t_full = ref.simulate(ks)
+        _, ref_ck = ref.simulate(ks, record=True)
+        t_fast, fast_ck = fast.simulate(ks, record=True)
+        assert t_fast == t_full
+        assert [c.pos for c in ref_ck] == list(range(n))
+        assert [c.pos for c in fast_ck] == list(range(n))
+        for p in {0, n // 2, n - 1}:
+            # resume from own checkpoints
+            assert ref.simulate(ks, start_state=ref_ck[p]) == t_full
+            assert fast.simulate(ks, start_state=fast_ck[p])[0] == t_full
+            # checkpoints are interchangeable between implementations
+            assert ref.simulate(ks, start_state=fast_ck[p]) == t_full
+            assert fast.simulate(ks, start_state=ref_ck[p])[0] == t_full
+
+
+# --------------------------------------------------------------------------
+# delta evaluation == full re-simulation (exact), randomized + adversarial
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("device,maker", [(GTX580, _gpu_kernels),
+                                          (_TPU, _tpu_profiles),
+                                          (GTX580, _adversarial)])
+def test_event_delta_equals_full_resimulation(device, maker):
+    rng = random.Random(5)
+    ref = EventSimulator(device)
+    for _ in range(10):
+        ks = maker(rng, rng.randint(2, 18))
+        ev = DeltaEvaluator(device, model="event")
+        ev.rebase(ks)
+        for cand, first in _moves(rng, ks, 12):
+            assert ev.evaluate(cand, first) == ref.simulate(cand)
+
+
+def test_event_delta_costs_suffix_fraction():
+    rng = random.Random(2)
+    ks = _gpu_kernels(rng, 16)
+    ev = DeltaEvaluator(GTX580, model="event")
+    ev.rebase(ks)
+    cand = list(ks)
+    cand[14], cand[15] = cand[15], cand[14]
+    t, frac = ev.evaluate_costed(cand, 14)
+    assert t == EventSimulator(GTX580).simulate(cand)
+    assert frac == pytest.approx(2 / 16)
+    # event model: every position is an admission boundary
+    assert ev.boundaries() is None
+
+
+@pytest.mark.slow
+def test_event_delta_equals_full_resimulation_n512():
+    """Large-n sweep (serving-scale order): suffix re-simulation stays
+    bit-exact at n = 512."""
+    rng = random.Random(11)
+    ks = _gpu_kernels(rng, 512)
+    ev = DeltaEvaluator(GTX580, model="event")
+    ev.rebase(ks)
+    ref = EventSimulator(GTX580)
+    for p in (511, 400, 256):
+        cand = list(ks)
+        cand[p - 1], cand[p] = cand[p], cand[p - 1]
+        assert ev.evaluate(cand, p - 1) == ref.simulate(cand)
+
+
+# --------------------------------------------------------------------------
+# refine_order(model="event") delta path
+# --------------------------------------------------------------------------
+
+def test_refine_event_delta_matches_reference_trajectory():
+    """With the full move set the event delta path retraces the
+    full-evaluation trajectory exactly (same moves, equal times)."""
+    rng = random.Random(9)
+    for _ in range(5):
+        ks = _gpu_kernels(rng, rng.randint(3, 9))
+        sim = EventSimulator(GTX580)
+        o_ref, t_ref, _ = refine_order(
+            ks, GTX580, time_fn=sim.simulate, budget=2000,
+            neighborhood="full")
+        o_fast, t_fast, _ = refine_order(
+            ks, GTX580, model="event", budget=2000, neighborhood="full")
+        assert t_fast == t_ref
+        assert [k.name for k in o_fast] == [k.name for k in o_ref]
+
+
+def test_refine_event_never_worse_and_exact():
+    rng = random.Random(3)
+    for neighborhood in ("full", "adjacent", "auto"):
+        ks = _gpu_kernels(rng, 12)
+        t0 = EventSimulator(GTX580).simulate(ks)
+        order, t, _ = refine_order(ks, GTX580, model="event", budget=60,
+                                   neighborhood=neighborhood)
+        assert t <= t0 + 1e-15
+        # the returned time is the true event-model time, exactly
+        assert t == EventSimulator(GTX580).simulate(order)
+
+
+# --------------------------------------------------------------------------
+# satellite regressions
+# --------------------------------------------------------------------------
+
+def test_cohort_merge_same_instant_only():
+    """A block admitted at a later instant must not merge into an old
+    cohort whose progress underflowed to zero (frac_left still exactly
+    1.0): cohorts are tagged with their admission instant.
+
+    Scenario: a glacially slow kernel B holds unit 0 at frac_left ==
+    1.0 while a fast kernel F completes on unit 1; the queue head X
+    only fits after F frees unit 1, which unblocks a second B block
+    onto unit 0 at t > 0.  The checkpoint captured when the trailing
+    sentinel is first examined must show two separate B cohorts with
+    distinct admission instants.
+    """
+    dev = DeviceModel(name="tiny", n_units=2, caps={"s": 4.0},
+                      max_resident=8, compute_rate=1e9, mem_bw=1e9,
+                      r_balanced=1.0)
+    B = KernelProfile("B", n_blocks=1, demands={"s": 2.0},
+                      inst_per_block=1e30, r=1e9)
+    F = KernelProfile("F", n_blocks=1, demands={"s": 4.0},
+                      inst_per_block=1e6, r=1e9)
+    X = KernelProfile("X", n_blocks=1, demands={"s": 4.0},
+                      inst_per_block=1e6, r=1e9)
+    S = KernelProfile("S", n_blocks=1, demands={"s": 4.0},
+                      inst_per_block=1e6, r=1e9)  # trailing sentinel
+    order = [B, F, X, B, S]
+    for sim_cls in (EventSimulator, _FastEventSim):
+        sim = sim_cls(dev)
+        out = sim.simulate(order, record=True)
+        ckpts = out[1]
+        cp = ckpts[4]  # sentinel S: examined right after B#2 placed
+        unit0 = cp.units[0]
+        b_cohorts = [c for c in unit0[2] if c[0] is B]
+        assert len(b_cohorts) == 2, (
+            "cross-instant blocks must form separate cohorts")
+        (k1, n1, f1, t1), (k2, n2, f2, t2) = b_cohorts
+        assert n1 == n2 == 1
+        assert f1 == 1.0  # old cohort's progress underflowed
+        assert t1 == 0.0 and t2 > 0.0  # distinct admission instants
+
+
+def test_oversized_block_event_matches_round_exactly():
+    """The degenerate oversized-block path charges ceil(n_blocks /
+    n_units) occupancy-adjusted solo passes — the same float
+    accumulation as RoundSimulator's forced single-block rounds."""
+    dev = DeviceModel(name="occ", n_units=2,
+                      caps={"s": 4.0, "w": 8.0}, max_resident=4,
+                      compute_rate=1e9, mem_bw=1e9, r_balanced=1.0,
+                      sat_dim="w", sat_compute=4.0, sat_memory=8.0)
+    for nb in (1, 2, 5, 7):
+        k = KernelProfile("big", n_blocks=nb,
+                          demands={"s": 8.0, "w": 2.0},
+                          inst_per_block=3e8, r=2.0)
+        t_event = EventSimulator(dev).simulate([k])
+        t_round = RoundSimulator(dev).simulate([k])
+        assert t_event == t_round
+        t_fast = _FastEventSim(dev).simulate([k])[0]
+        assert t_fast == t_event
+    # occupancy adjustment is applied (w=2 of sat_memory=8 -> mem eff
+    # 0.25): a single block must take longer than its raw roofline
+    k = KernelProfile("big", n_blocks=1, demands={"s": 8.0, "w": 2.0},
+                      inst_per_block=3e8, r=2.0)
+    raw = max(k.inst_per_block / dev.compute_rate,
+              k.mem_per_block() / dev.mem_bw)
+    assert EventSimulator(dev).simulate([k]) > raw
+
+
+def test_oversized_mixed_with_normal_kernels_consistent():
+    """Orders mixing oversized and normal kernels stay exactly equal
+    between the reference and fast event sims, and delta-evaluate
+    exactly."""
+    rng = random.Random(21)
+    big = KernelProfile("big", n_blocks=5,
+                        demands={"shm": 96000.0, "reg": 512.0, "warp": 4.0},
+                        inst_per_block=1e8, r=4.0)
+    for _ in range(5):
+        ks = _gpu_kernels(rng, 6) + [big]
+        rng.shuffle(ks)
+        ref = EventSimulator(GTX580)
+        assert _FastEventSim(GTX580).simulate(ks)[0] == ref.simulate(ks)
+        ev = DeltaEvaluator(GTX580, model="event")
+        ev.rebase(ks)
+        for cand, first in _moves(rng, ks, 6):
+            assert ev.evaluate(cand, first) == ref.simulate(cand)
+
+
+def test_event_sim_sat_dim_configs_match_reference():
+    """Event model under the three sat_dim configurations (in caps,
+    empty, set-but-untracked): fast == reference exactly, and the
+    untracked config runs at peak efficiency rather than degrading to
+    ~0 (the DeviceModel audit fix)."""
+    rng = random.Random(31)
+    base = dict(n_units=4, caps={"a": 100.0, "b": 50.0}, max_resident=4,
+                compute_rate=1e9, mem_bw=1e9, r_balanced=2.0)
+    devs = [DeviceModel(name="insat", sat_dim="a", sat_compute=30.0,
+                        sat_memory=80.0, **base),
+            DeviceModel(name="nosat", **base),
+            DeviceModel(name="oddsat", sat_dim="zz", sat_compute=30.0,
+                        sat_memory=80.0, **base)]
+    ks = [KernelProfile(f"k{i}", n_blocks=rng.randint(1, 8),
+                        demands={"a": rng.uniform(1, 40),
+                                 "b": rng.uniform(1, 20)},
+                        inst_per_block=rng.uniform(1e5, 1e7),
+                        r=rng.uniform(0.5, 8.0)) for i in range(10)]
+    for dev in devs:
+        assert (_FastEventSim(dev).simulate(ks)[0]
+                == EventSimulator(dev).simulate(ks))
+    # untracked sat_dim == no occupancy model (not ~1e12x slower)
+    assert (simulate(ks, devs[2], model="event")
+            == simulate(ks, devs[1], model="event"))

@@ -180,6 +180,61 @@ def test_refine_never_worse_than_input():
 # satellite pins
 # --------------------------------------------------------------------------
 
+def test_warm_start_insert_prefers_symbiotic_round():
+    """The warm-start primitive places a joining decode step into the
+    prefill round (compute/memory mixing, the paper's rule) and
+    reports no-fit with -1."""
+    from repro.core import warm_start_insert
+    dev = make_serving_device()
+    p = prefill_profile("p", n_params=7e9, seq_len=512,
+                        kv_bytes_per_token=131072).profile()
+    ds = [decode_profile(f"d{i}", n_params=7e9, kv_len=1024,
+                         kv_bytes_per_token=131072).profile()
+          for i in range(3)]
+    idx = warm_start_insert([[p], [ds[0], ds[1]]], ds[2], dev)
+    assert idx == 0
+    # nothing fits: a round already at the token budget
+    full = prefill_profile("big", n_params=7e9, seq_len=4096,
+                           kv_bytes_per_token=131072).profile()
+    assert warm_start_insert([[full]], ds[2], dev) == -1
+    assert warm_start_insert([], ds[2], dev) == -1
+
+
+def test_sat_dim_configs_match_reference():
+    """_FastRoundSim._eff must mirror DeviceModel.*_efficiency under
+    every sat_dim configuration — in caps, empty, and set-but-untracked
+    (the audit fix: an untracked sat_dim carries no occupancy signal
+    and must run at peak, not degrade to ~0 efficiency)."""
+    rng = random.Random(19)
+    base = dict(n_units=4, caps={"a": 100.0, "b": 50.0}, max_resident=4,
+                compute_rate=1e9, mem_bw=1e9, r_balanced=2.0)
+    devs = [DeviceModel(name="insat", sat_dim="a", sat_compute=30.0,
+                        sat_memory=80.0, **base),
+            DeviceModel(name="nosat", **base),
+            DeviceModel(name="oddsat", sat_dim="zz", sat_compute=30.0,
+                        sat_memory=80.0, **base)]
+    for trial in range(10):
+        ks = [KernelProfile(f"k{i}", n_blocks=rng.randint(1, 8),
+                            demands={"a": rng.uniform(1, 40),
+                                     "b": rng.uniform(1, 20)},
+                            inst_per_block=rng.uniform(1e5, 1e7),
+                            r=rng.uniform(0.5, 8.0))
+              for i in range(rng.randint(2, 12))]
+        for dev in devs:
+            ref = RoundSimulator(dev).simulate(ks)
+            ev = DeltaRoundEvaluator(dev)
+            assert ev.rebase(ks) == ref, (trial, dev.name)
+            cand = list(ks)
+            cand[0], cand[-1] = cand[-1], cand[0]
+            assert ev.evaluate(cand, 0) == RoundSimulator(dev).simulate(
+                cand), (trial, dev.name)
+    # untracked sat_dim == no occupancy model: identical times
+    ks = [KernelProfile("k", n_blocks=4, demands={"a": 10.0, "b": 5.0},
+                        inst_per_block=1e6, r=2.0)]
+    assert (RoundSimulator(devs[2]).simulate(ks)
+            == RoundSimulator(devs[1]).simulate(ks))
+
+
 def test_percentile_rank_convention():
     """percentile_rank returns a 0-100 percentage, not a fraction."""
     assert percentile_rank(1.0, [2.0, 1.5, 1.0, 0.5]) == 75.0

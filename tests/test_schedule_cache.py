@@ -1,5 +1,6 @@
 """Unit tests for the serving ScheduleCache (no model, no jax device
-work): signatures, key multisets, pattern replay, LRU bound."""
+work): signatures, key multisets, pattern replay, LRU bound and
+refresh accounting, near-miss warm starts."""
 
 from repro.serve import ScheduleCache
 
@@ -37,3 +38,62 @@ def test_lru_eviction_bound():
         c.store(("k", i), ())
     assert len(c._store) == 4
     assert ("k", 9) in c._store and ("k", 5) not in c._store
+
+
+def test_restore_refreshes_lru_position():
+    """Re-storing an existing key must move it to the fresh end:
+    without move_to_end a refreshed entry kept its stale position and
+    was evicted as if it were never touched."""
+    c = ScheduleCache(max_entries=3)
+    c.store(("k", 1), ())
+    c.store(("k", 2), ())
+    c.store(("k", 3), ())
+    c.store(("k", 1), ((("d", 0),),))   # refresh oldest entry
+    c.store(("k", 4), ())               # evicts the true LRU: ("k", 2)
+    assert ("k", 1) in c._store
+    assert ("k", 2) not in c._store
+    assert c._store[("k", 1)] == ((("d", 0),),)
+
+
+def _key(kind, sigs):
+    return (kind, ScheduleCache.key_of(list(sigs)))
+
+
+def test_near_miss_one_joined():
+    c = ScheduleCache()
+    pat = ((("p", 8), ("d", 0)), (("d", 0),))
+    c.store(_key("symbiotic", [("p", 8), ("d", 0), ("d", 0)]), pat)
+    # one decode joined the mix
+    got = c.near_miss(_key("symbiotic",
+                           [("p", 8), ("d", 0), ("d", 0), ("d", 1)]))
+    assert got is not None
+    pattern, added, removed = got
+    assert pattern == pat and added == [("d", 1)] and removed == []
+
+
+def test_near_miss_one_left():
+    c = ScheduleCache()
+    pat = ((("p", 8), ("d", 0)), (("d", 0),))
+    c.store(_key("symbiotic", [("p", 8), ("d", 0), ("d", 0)]), pat)
+    got = c.near_miss(_key("symbiotic", [("p", 8), ("d", 0)]))
+    assert got is not None
+    pattern, added, removed = got
+    assert pattern == pat and added == [] and removed == [("d", 0)]
+
+
+def test_near_miss_rejects_far_keys_and_other_kinds():
+    c = ScheduleCache()
+    c.store(_key("symbiotic", [("d", 0), ("d", 0)]), ())
+    # two signatures differ (a substitution): not a near miss
+    assert c.near_miss(_key("symbiotic", [("d", 1), ("d", 2)])) is None
+    # same multiset distance but different policy kind
+    assert c.near_miss(_key("refined", [("d", 0)])) is None
+    # identical key is a lookup hit, not a near miss
+    assert c.near_miss(_key("symbiotic", [("d", 0), ("d", 0)])) is None
+
+
+def test_warm_hits_surface_in_stats():
+    c = ScheduleCache()
+    assert c.stats()["warm_hits"] == 0
+    c.warm_hits += 1
+    assert c.stats()["warm_hits"] == 1

@@ -111,6 +111,27 @@ def test_serving_engine_generates_and_orders():
     assert stats["modelled_time_s"] > 0
 
 
+def test_serving_warm_start_on_arrival():
+    """A request joining a steady mix is a cache near-miss: the engine
+    must adapt the cached composition (warm start) instead of
+    recomputing, and generation must stay correct."""
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.serve import Request, SchedulerPolicy, ServingEngine
+    cfg = get_config("qwen1.5-0.5b", "smoke")
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    eng = ServingEngine(cfg, params, max_len=32,
+                        policy=SchedulerPolicy(kind="symbiotic"))
+    eng.submit([Request(i, rng.integers(0, 512, size=4), max_new_tokens=6)
+                for i in range(3)])
+    late = [Request(10, rng.integers(0, 512, size=4), max_new_tokens=4)]
+    stats = eng.run(arrivals=[(2, late)])
+    cache = stats["schedule_cache"]
+    assert cache["warm_hits"] >= 1, cache
+    assert all(len(v) >= 4 for v in stats["outputs"].values())
+
+
 def test_serving_greedy_decode_deterministic():
     from repro.configs import get_config
     from repro.models import transformer as T
