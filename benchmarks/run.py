@@ -10,12 +10,14 @@ import time
 
 def main() -> None:
     t0 = time.time()
-    from benchmarks import fig1, roofline, serving, table3
+    from benchmarks import dag, fig1, roofline, serving, table3
     table3.run()
     print()
     fig1.run()
     print()
     serving.run()
+    print()
+    dag.run()
     print()
     roofline.run()
     print(f"\n# total benchmark wall time: {time.time() - t0:.1f}s")

@@ -10,7 +10,10 @@ For n in {8, 32, 128, 512, 1024} kernels, on two workload mixes
 * the modelled execution time of the produced order under both the
   round model (the refine objective) and the event simulator,
 
-plus a second section for **event-model refinement** at n in
+plus a **DAG-constrained construction** section (the ready-set greedy
+``repro.graph.greedy_order_dag`` over chain-structured random DAGs,
+path ``dag_fast`` — guarded by ``check_regression.py`` alongside the
+flat fast path), and a second section for **event-model refinement** at n in
 {64, 128, 256, 512, 1024}: full re-simulation per candidate (the
 reference ``EventSimulator``, the pre-checkpointing status quo) vs
 the checkpointing delta path (``refine_order(model="event")``, suffix
@@ -41,6 +44,7 @@ from repro.core.refine import refine_order
 from repro.core.resources import (KernelProfile, bs_kernel, ep_kernel,
                                   es_kernel, sw_kernel)
 from repro.core.tpu import decode_profile, make_serving_device, prefill_profile
+from repro.graph import KernelGraph, greedy_order_dag
 
 REFINE_BUDGET = 200
 NS = (8, 32, 128, 512, 1024)
@@ -122,6 +126,31 @@ def construct(ks, device, path: str) -> dict:
     }
 
 
+def chain_edges(rng: random.Random, n: int,
+                width: int) -> set[tuple[int, int]]:
+    """``width`` parallel chains over ``n`` kernels (the traced-arch
+    edge shape: intra-request chains, cross-request independence)."""
+    edges: set[tuple[int, int]] = set()
+    chains: list[list[int]] = [[] for _ in range(max(width, 1))]
+    for i in range(n):
+        c = chains[rng.randrange(len(chains))]
+        if c:
+            edges.add((c[-1], i))
+        c.append(i)
+    return edges
+
+
+def dag_construct(ks, edges, device) -> dict:
+    """Ready-set greedy construction over a kernel DAG; wall time is
+    the guarded quantity (``check_regression.py``, path="dag_fast")."""
+    t0 = time.perf_counter()
+    sched = greedy_order_dag(ks, device, edges=edges)
+    wall = time.perf_counter() - t0
+    assert KernelGraph(ks, edges).is_topological(sched.order)
+    return {"path": "dag_fast", "wall_s": wall,
+            "rounds": len(sched.rounds), "n_edges": len(edges)}
+
+
 def event_refine(ks, device, path: str) -> dict:
     """Event-model local search on the greedy order; returns wall time,
     evaluated moves and effective-move throughput."""
@@ -169,6 +198,18 @@ def run(max_ref_n: int = 512, seed: int = 0, max_event_full_n: int = 256,
                          f"{rec['modelled_event_time_s']:.5f},"
                          f"{speedup if speedup == '' else f'{speedup:.1f}'}")
                 results.append({"scenario": name, "n": n, **rec})
+    print_fn("# DAG-constrained construction (ready-set greedy, "
+             f"chain-structured edges, best of {repeats})")
+    print_fn("scenario,n,path,wall_s,rounds,n_edges")
+    for n in NS:
+        rng = random.Random(seed)
+        ks = gpu_mix(rng, n)
+        edges = chain_edges(rng, n, width=max(4, n // 8))
+        rec = _best_of(repeats,
+                       lambda: dag_construct(ks, edges, GTX580))
+        print_fn(f"gpu_dag,{n},{rec['path']},{rec['wall_s']:.4f},"
+                 f"{rec['rounds']},{rec['n_edges']}")
+        results.append({"scenario": "gpu_dag", "n": n, **rec})
     print_fn("# Event-model refine: full re-sim vs checkpoint delta "
              f"(budget {EVENT_BUDGET} full-sim equivalents)")
     print_fn("scenario,n,path,wall_s,evals,moves_per_s,throughput_ratio")

@@ -11,19 +11,32 @@ hiding decode steps under prefill compute is the win the paper's
 reordering delivers here.
 
 Policies:
-* ``fifo``      — arrival-order packing (head-of-line prefill blocks),
-* ``symbiotic`` — Algorithm 1 round composition (unmodified; the
+* ``fifo``          — arrival-order packing (head-of-line prefill blocks),
+* ``symbiotic``     — Algorithm 1 round composition (unmodified; the
   vectorized incremental path, identical rounds to the reference),
-* ``refined``   — + local search under the round cost model.
+* ``refined``       — + local search under the TPU round cost model
+  (weight stream charged once per re-rounded candidate),
+* ``refined-round`` / ``refined-event`` — + local search on the flat
+  launch order under the corresponding **core simulator** model,
+  delta-evaluated (the ``refine_model`` axis: how much the richer
+  event-model objective buys end-to-end vs the round model).
 
 A second section runs the *real* ``ServingEngine`` (smoke-size model,
 greedy decode on CPU) and reports its ``ScheduleCache`` hit-rate:
 steady-state decode-heavy steps reuse the previous round composition
-instead of re-running greedy + guard + refine every ``step()``.
+instead of re-running greedy + guard + refine every ``step()``.  A
+third sweeps the cache's ``kv_bucket`` quantization under a long-tail
+kv-len distribution, reporting hit-rate vs modelled regret (cached
+composition time vs an uncached run of the same workload).
+
+``python benchmarks/serving.py`` writes all three sections to
+``BENCH_serving.json``.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import random
 from dataclasses import dataclass, field
 
@@ -33,7 +46,12 @@ from repro.core.tpu import (decode_profile, fifo_rounds,
                             make_serving_device, prefill_profile,
                             round_time)
 
-__all__ = ["run", "simulate_load", "engine_cache_stats"]
+__all__ = ["run", "simulate_load", "engine_cache_stats",
+           "kv_bucket_sweep"]
+
+#: budget for the refine_model axis rows (full-simulation equivalents;
+#: the event model delta path stretches this ~10x in effective moves)
+REFINE_MODEL_BUDGET = 100
 
 N_PARAMS = 7e9
 KVB = 131072.0      # bytes/token (32L x 8kv x 128hd x 2 x bf16)
@@ -121,6 +139,15 @@ def simulate_load(kind: str, policy: str, *, seed: int = 3,
                                            time_fn=tfn, budget=400)
                 rounds = fifo_rounds([by[p.name][0] for p in order],
                                      device)
+            elif policy in ("refined-round", "refined-event"):
+                # the refine_model axis: flat-order refinement under
+                # the core simulator, delta-evaluated via the
+                # checkpointing DeltaEvaluator, then re-rounded
+                order, _, _ = refine_order(
+                    sched.order, device, model=policy.split("-")[1],
+                    budget=REFINE_MODEL_BUDGET, neighborhood="auto")
+                rounds = fifo_rounds([by[p.name][0] for p in order],
+                                     device)
             else:
                 rounds = [[by[p.name][0] for p in rd.kernels]
                           for rd in sched.rounds]
@@ -157,7 +184,8 @@ def engine_cache_stats(*, n_requests: int = 6, max_new_tokens: int = 24,
     params = T.init(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
     eng = ServingEngine(cfg, params, max_len=64,
-                        policy=SchedulerPolicy(kind="symbiotic"))
+                        policy=SchedulerPolicy(kind="symbiotic",
+                                               warm_audit_frac=1.0))
     eng.submit([Request(i, rng.integers(0, 512, size=4),
                         max_new_tokens=max_new_tokens)
                 for i in range(n_requests)])
@@ -170,29 +198,145 @@ def engine_cache_stats(*, n_requests: int = 6, max_new_tokens: int = 24,
     print_fn(f"engine ScheduleCache: {cache['hits']} hits / "
              f"{cache['misses']} misses "
              f"({cache['warm_hits']} warm starts, "
+             f"{cache['warm_sampled']} audited, "
+             f"warm regret {cache['warm_regret_mean']:+.2%}, "
              f"hit-rate {cache['hit_rate']:.1%}) over "
              f"{stats['rounds']} rounds, "
              f"{stats['total_new_tokens']} tokens")
     return cache
 
 
-def run(print_fn=print, with_engine: bool = True) -> list[dict]:
+def kv_bucket_sweep(buckets=(64, 128, 256, 512), *, seed: int = 0,
+                    print_fn=print) -> list[dict]:
+    """ScheduleCache ``kv_bucket`` sensitivity under a long-tail
+    kv-len distribution: hit-rate vs modelled regret.
+
+    A coarse bucket hashes more steps onto cached patterns (higher
+    hit-rate) but replays compositions farther from what a cold greedy
+    would build for the drifted kv demands; ``modelled_regret`` is the
+    modelled-time ratio of the cached run against an uncached run of
+    the identical workload (generated tokens are exact and equal in
+    both — only round composition differs).  Magnitude, not sign, is
+    the fidelity signal: *negative* regret means the replayed pattern
+    claimed a shorter modelled time than cold composition — typically
+    a stale pattern packing drifted items into rounds the cold
+    scheduler (which re-checks capacity against the actual demands)
+    would have split, an optimism the roofline round model does not
+    penalise.  The workload keeps several requests decoding
+    concurrently at kv-lens from tens to ~300 and injects long-prompt
+    arrivals mid-decode, so compute-bound prefill shares rounds with
+    drifting decode items — without that, all-decode rounds are
+    memory-bound and total time collapses to a function of the round
+    count alone, pinning every regret at zero.
+    """
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.serve import Request, SchedulerPolicy, ServingEngine
+
+    cfg = get_config("qwen1.5-0.5b", "smoke")
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    #: long-tail decode lengths, deep and *concurrent*: the live mix
+    #: spans kv-lens from tens to ~300 at once, so consecutive steps
+    #: fall into genuinely different signature multisets per bucket
+    #: width (short-lived requests alone would keep every signature in
+    #: bucket 0 and make the sweep vacuous)
+    tail_lens = (60, 80, 100, 120, 160, 200, 240, 280)
+    #: hbm-tight round budget: decode items bring kv_len * kv_bytes of
+    #: round traffic, so which kv-lens can share a round — the thing a
+    #: coarse bucket blurs — is exactly what binds here.  (A vmem- or
+    #: slot-bound budget would make partitioning kv-insensitive and
+    #: pin the regret at 0 by construction.)
+    device = make_serving_device(hbm_round_budget=float(1 << 20))
+
+    def run_once(policy: SchedulerPolicy) -> dict:
+        rng = np.random.default_rng(seed)
+        eng = ServingEngine(cfg, params, max_len=320, device=device,
+                            policy=policy)
+        eng.submit([Request(i, rng.integers(0, 512, size=6),
+                            max_new_tokens=n)
+                    for i, n in enumerate(tail_lens)])
+        # Long prompts arriving mid-decode: compute-bound prefill
+        # items must share rounds with drifting decode items, so
+        # round membership — what the replayed pattern fixes — moves
+        # the modelled time (all-decode rounds are memory-bound and
+        # their total time collapses to a function of the round count
+        # alone, which would pin the sweep's regret at zero).
+        late = [(it, [Request(100 + j,
+                              rng.integers(0, 512, size=180),
+                              max_new_tokens=24)])
+                for j, it in enumerate((30, 90))]
+        return eng.run(arrivals=late)
+
+    cold = run_once(SchedulerPolicy(kind="symbiotic", cache=False))
+    t_cold = cold["modelled_time_s"]
+    out = []
+    print_fn("# ScheduleCache kv_bucket sensitivity (long-tail kv-lens)")
+    print_fn("kv_bucket,hit_rate,entries,modelled_regret_pct")
+    for b in buckets:
+        st = run_once(SchedulerPolicy(kind="symbiotic", kv_bucket=b))
+        assert st["outputs"] == cold["outputs"], "tokens must be exact"
+        cache = st["schedule_cache"]
+        rec = {"kv_bucket": b,
+               "hit_rate": cache["hit_rate"],
+               "hits": cache["hits"], "misses": cache["misses"],
+               "entries": cache["entries"],
+               "modelled_time_s": st["modelled_time_s"],
+               "modelled_regret": st["modelled_time_s"] / t_cold - 1.0}
+        out.append(rec)
+        print_fn(f"{b},{rec['hit_rate']:.3f},{rec['entries']},"
+                 f"{rec['modelled_regret'] * 100:.2f}")
+    return out
+
+
+#: the refine_model axis rides along with the classic three policies
+_POLICIES = ("fifo", "symbiotic", "refined", "refined-round",
+             "refined-event")
+
+
+def run(print_fn=print, with_engine: bool = True,
+        with_kv_sweep: bool = True) -> dict:
     print_fn("# Symbiotic continuous batching (7B cost model, v5e)")
     print_fn("mix,policy,rounds,time_ms,tok_per_s,speedup_vs_fifo")
-    out = []
+    mixes = []
     for kind in ("prefill-heavy", "balanced", "decode-heavy"):
         base = None
-        for policy in ("fifo", "symbiotic", "refined"):
+        for policy in _POLICIES:
             r = simulate_load(kind, policy)
             if base is None:
                 base = r["time_s"]
             r["speedup_vs_fifo"] = base / r["time_s"]
-            out.append(r)
+            mixes.append(r)
             print_fn(f"{kind},{policy},{r['rounds']},"
                      f"{r['time_s'] * 1e3:.1f},{r['tok_per_s']:.0f},"
                      f"{r['speedup_vs_fifo']:.3f}")
+    out = {"benchmark": "serving",
+           "refine_model_budget": REFINE_MODEL_BUDGET,
+           "mixes": mixes}
     if with_engine:
         print_fn("# ServingEngine schedule-cache (decode-heavy steady state)")
-        out.append({"kind": "engine-cache",
-                    **engine_cache_stats(print_fn=print_fn)})
+        out["engine_cache"] = engine_cache_stats(print_fn=print_fn)
+    if with_kv_sweep:
+        out["kv_bucket_sweep"] = kv_bucket_sweep(print_fn=print_fn)
     return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--no-engine", action="store_true",
+                    help="skip the real-engine sections (cost-model "
+                         "mixes only)")
+    args = ap.parse_args(argv)
+    out = run(with_engine=not args.no_engine,
+              with_kv_sweep=not args.no_engine)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,50 @@
+"""Schedule a real model graph: trace an architecture into per-layer
+work-item chains, compose rounds with the ready-set greedy, map them
+onto launch queues, and compare the gated makespan against random
+topological launch orders (the paper's Fig. 1 protocol, generalized
+from an independent batch to a kernel DAG).
+
+  PYTHONPATH=src python examples/dag_schedule.py
+"""
+
+from repro.configs import get_config
+from repro.core import percentile_rank
+from repro.core.tpu import make_serving_device
+from repro.graph import (DagEventSimulator, assign_streams,
+                         greedy_order_dag, refine_order_dag, trace_arch)
+
+
+def main():
+    device = make_serving_device()
+    for arch in ("qwen1.5-0.5b", "mixtral-8x7b"):
+        cfg = get_config(arch, "full")
+        traced = trace_arch(cfg, max_stages=16)
+        g = traced.graph
+        g.validate()
+        sim = DagEventSimulator(device, g.edges_by_id())
+
+        sched = greedy_order_dag(g.kernels, device, edges=g.edges)
+        t_alg = sim.simulate(sched.order)
+        order, _, _ = refine_order_dag(sched.order, device,
+                                       edge_ids=g.edges_by_id(),
+                                       budget=60, model="event",
+                                       neighborhood="adjacent")
+        t_ref = sim.simulate(order)
+
+        rand = [sim.simulate(o)
+                for o in g.random_topological_orders(200, seed=1)]
+        pct = percentile_rank(t_alg, rand)
+        med = sorted(rand)[len(rand) // 2]
+
+        sa = assign_streams(sched, g.edges_by_id(), k=4)
+        print(f"{arch}: {g.n} nodes, {len(g.edges)} edges, "
+              f"{len(sched.rounds)} rounds")
+        print(f"  greedy_order_dag {t_alg * 1e3:8.3f} ms  "
+              f"(beats {pct:.0f}% of 200 random topological orders; "
+              f"median {med * 1e3:.3f} ms)")
+        print(f"  + refine_order_dag {t_ref * 1e3:6.3f} ms")
+        print(f"  4 launch queues, per-queue kernels: {sa.occupancy()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,14 @@ strict maximum in remaining-order row-major scan).  This is enforced
 by ``tests/test_fastscore.py`` on randomized profile sets; the
 arithmetic is kept operation-for-operation identical to
 :mod:`repro.core.scorer` so even near-ties resolve the same way.
+
+This module schedules *independent* kernel batches.  When the kernels
+carry precedence edges (traced per-layer model chains — see
+``repro.graph.trace_arch``), call
+:func:`repro.graph.greedy_order_dag`: it reuses this module's
+``ProfileTable``/``pair_score_matrix`` machinery, restricts candidate
+scans to the ready frontier, and degenerates to
+:func:`greedy_order_fast` bit-for-bit on an empty edge set.
 """
 
 from __future__ import annotations

@@ -35,6 +35,14 @@ the train-side overlap scheduler, the examples and the paper-figure
 benchmarks — goes through ``fastscore.greedy_order_fast``; new code
 should never call :func:`greedy_order` outside a test or an explicit
 oracle comparison (``benchmarks/scaling.py``'s reference path).
+
+Both this oracle and the fast path assume every kernel is free to
+co-schedule with every other.  When precedence edges exist (per-layer
+chains of a traced model graph, producer/consumer kernels), use
+:mod:`repro.graph` instead: ``greedy_order_dag`` is the ready-set
+variant of the same algorithm (identical to the flat path on an empty
+edge set), ``refine_order_dag`` the legal local search, and
+``DagEventSimulator`` the gated makespan model.
 """
 
 from __future__ import annotations

@@ -59,6 +59,14 @@ class TpuWorkItem:
     vmem_bytes: float
     tokens: int
     intensity_hint: float | None = None
+    #: Weight bytes THIS item's computation streams (a layer stage's
+    #: parameter share, bf16).  0.0 for whole-request items, whose
+    #: shared weight stream the engine charges per round via
+    #: ``round_time(..., weights_bytes)``; per-stage items from
+    #: ``repro.graph.trace_arch`` carry their own share so a round's
+    #: weight traffic can be summed over the *distinct* stages present
+    #: (co-scheduled copies of one stage share its stream).
+    weight_bytes: float = 0.0
 
     @property
     def intensity(self) -> float:

@@ -1,0 +1,30 @@
+"""Dependency-aware kernel-DAG scheduling (PR 3's new subsystem).
+
+Generalizes the paper's Algorithm 1 — built for mutually independent
+kernels — to precedence-constrained workloads: real model graphs where
+attention feeds MLP feeds the next layer, traced per request from the
+serving configs.  Flat-order callers keep using
+``repro.core.fastscore``; when dependencies exist, come here:
+
+* :mod:`repro.graph.kernel_graph` — :class:`KernelGraph` +
+  :func:`trace_arch` (config -> per-layer work-item chains),
+* :mod:`repro.graph.constrained` — :func:`greedy_order_dag` (ready-set
+  incremental greedy) + :func:`refine_order_dag` (legal local search),
+* :mod:`repro.graph.streams` — :func:`assign_streams` (k launch
+  queues) + :class:`DagEventSimulator` (gated makespan model).
+"""
+
+from .constrained import greedy_order_dag, refine_order_dag
+from .kernel_graph import (KernelGraph, TracedWorkload,
+                           arch_kv_bytes_per_token, estimate_n_params,
+                           trace_arch)
+from .streams import (DagEventSimulator, StreamAssignment, assign_streams,
+                      fifo_rounds_dag)
+
+__all__ = [
+    "KernelGraph", "TracedWorkload", "trace_arch",
+    "arch_kv_bytes_per_token", "estimate_n_params",
+    "greedy_order_dag", "refine_order_dag",
+    "DagEventSimulator", "StreamAssignment", "assign_streams",
+    "fifo_rounds_dag",
+]

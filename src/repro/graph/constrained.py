@@ -1,0 +1,247 @@
+"""Algorithm 1 under precedence constraints: ready-set greedy + legal
+local search.
+
+:func:`greedy_order_dag` is the DAG generalisation of the incremental
+greedy (:func:`repro.core.fastscore.greedy_order_fast`): it reuses the
+same :class:`~repro.core.fastscore.ProfileTable` packing and the
+once-computed ``pair_score_matrix``, but restricts both the seed-pair
+scan and the absorption candidates of every round to the current
+*ready frontier* — nodes whose predecessors have all retired in
+**earlier** rounds.  Successors of a round's members only become ready
+when the round closes (co-scheduled kernels run concurrently, so a
+dependent kernel can never share a round with its predecessor), which
+makes the emitted flat order ``Rd_0 ++ Rd_1 ++ ...`` a valid
+topological order by construction.  With an empty edge set the frontier
+is always the whole alive set and the function reproduces
+``greedy_order_fast`` round-for-round, tie-breaks included
+(property-tested in ``tests/test_graph.py``).
+
+:func:`refine_order_dag` is the precedence-respecting counterpart of
+:func:`repro.core.refine.refine_order`: the same swap/reinsertion move
+sets, but moves that would invert an edge are rejected *before* any
+simulation, and legal candidates are delta-evaluated through the
+unchanged :class:`~repro.core.refine.DeltaEvaluator` (the evaluator's
+round/event models ignore precedence — they are the repo's standard
+makespan currency for a launch order; legality is enforced purely on
+the move filter, and the gated makespan of the final order is available
+from :class:`repro.graph.streams.DagEventSimulator`).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Iterable, Sequence
+
+import numpy as np
+
+from repro.core.fastscore import (ProfileTable, _absorb, _comb_ratio_scalar,
+                                  _comb_scores, _CombState,
+                                  pair_score_matrix)
+from repro.core.refine import DeltaEvaluator, _apply, _moves
+from repro.core.resources import DeviceModel, KernelProfile
+from repro.core.scheduler import Round, Schedule
+from repro.core.simulator import simulate
+
+__all__ = ["greedy_order_dag", "refine_order_dag"]
+
+
+def _edge_arrays(n: int, edges: Iterable[tuple[int, int]]
+                 ) -> tuple[list[list[int]], np.ndarray]:
+    succs: list[list[int]] = [[] for _ in range(n)]
+    indeg = np.zeros(n, dtype=np.int64)
+    for u, v in set(edges):
+        if not (0 <= u < n and 0 <= v < n) or u == v:
+            raise ValueError(f"bad edge ({u}, {v}) for n={n}")
+        succs[u].append(v)
+        indeg[v] += 1
+    return succs, indeg
+
+
+def greedy_order_dag(kernels: Sequence[KernelProfile],
+                     device: DeviceModel,
+                     *, edges: Iterable[tuple[int, int]] = ()) -> Schedule:
+    """Ready-set Algorithm 1 over a kernel DAG.
+
+    ``edges`` are ``(u, v)`` index pairs into ``kernels``: u must
+    complete before v starts.  Raises ``ValueError`` on a cycle.  With
+    ``edges=()`` this is exactly ``greedy_order_fast`` — same rounds,
+    same intra-round order, same tie-breaking.
+    """
+    n = len(kernels)
+    if n == 0:
+        return Schedule([])
+    succs, indeg = _edge_arrays(n, edges)
+    table = ProfileTable.build(kernels, device)
+    mat = pair_score_matrix(table)
+    # Same masking discipline as greedy_order_fast: lower triangle and
+    # diagonal dead so the argmax scans exactly the i < j entries the
+    # reference scan evaluates; rows/cols die as kernels retire.
+    mat[np.tril_indices(n)] = -1.0
+    alive = np.ones(n, dtype=bool)
+    rounds: list[Round] = []
+    n_alive = n
+
+    def kill(i: int) -> None:
+        nonlocal n_alive
+        alive[i] = False
+        mat[i, :] = -1.0
+        mat[:, i] = -1.0
+        n_alive -= 1
+
+    while n_alive:
+        ready = np.nonzero(alive & (indeg == 0))[0]
+        if ready.size == 0:
+            raise ValueError("precedence edges contain a cycle")
+        rd = Round()
+        members: list[int] = []
+        if ready.size == 1:
+            solo = int(ready[0])
+            kill(solo)
+            rd.kernels.append(table.kernels[solo])
+            members.append(solo)
+        else:
+            # Seed pair: first strict maximum over ready i < j entries
+            # in row-major order — the submatrix scan preserves the
+            # full-matrix scan order, so with no edges the selected
+            # pair is identical to greedy_order_fast's.
+            sub = mat[np.ix_(ready, ready)]
+            flat = int(np.argmax(sub))
+            si, sj = divmod(flat, ready.size)
+            i, j = int(ready[si]), int(ready[sj])
+            best = mat[i, j]
+            fits_pair = (
+                table.bpu[i] + table.bpu[j] <= device.max_resident and
+                bool(np.all(table.per_unit[i] + table.per_unit[j] <=
+                            table.caps)))
+            if best <= 0.0 and not fits_pair:
+                # Nothing pairs: heaviest (sort-key) ready kernel runs
+                # alone, as in the unconstrained greedy.
+                solo = int(ready[int(np.argmax(table.sort_key[ready]))])
+                kill(solo)
+                rd.kernels.append(table.kernels[solo])
+                members.append(solo)
+            else:
+                rd.insert_sorted(table.kernels[i], device)
+                rd.insert_sorted(table.kernels[j], device)
+                comb = _CombState(
+                    demand=table.per_unit[i] + table.per_unit[j],
+                    bpu=table.bpu[i] + table.bpu[j],
+                    n_blocks=table.n_blocks[i] + table.n_blocks[j],
+                    inst=table.inst[i] + table.inst[j],
+                    r=_comb_ratio_scalar(
+                        device, table.n_blocks[i], table.inst[i],
+                        table.r[i], table.n_blocks[j], table.inst[j],
+                        table.r[j]))
+                kill(i)
+                kill(j)
+                members += [i, j]
+                # Absorb from the round-start frontier only: indeg is
+                # not decremented until the round closes, so nodes
+                # unblocked by this round's members never join it.
+                while n_alive:
+                    idx = np.nonzero(alive & (indeg == 0))[0]
+                    if idx.size == 0:
+                        break
+                    scores, fits = _comb_scores(comb, table, idx)
+                    if not fits.any():
+                        break
+                    scores = np.where(fits, scores, -np.inf)
+                    c = int(idx[int(np.argmax(scores))])
+                    rd.insert_sorted(table.kernels[c], device)
+                    comb = _absorb(comb, table, c, device)
+                    kill(c)
+                    members.append(c)
+        # Round closes: retire members, unblocking their successors
+        # for subsequent rounds.
+        for m in members:
+            for v in succs[m]:
+                indeg[v] -= 1
+        rounds.append(rd)
+    return Schedule(rounds)
+
+
+def _legal_mask(order: Sequence[KernelProfile],
+                edge_ids: set) -> Callable[[Sequence[KernelProfile]], bool]:
+    """Fast topological check for candidate orders over the same
+    kernel objects: position-map build + edge scan, O(n + E)."""
+    def ok(cand: Sequence[KernelProfile]) -> bool:
+        pos = {id(k): p for p, k in enumerate(cand)}
+        return all(pos[u] < pos[v] for u, v in edge_ids)
+    return ok
+
+
+def refine_order_dag(
+    order: Sequence[KernelProfile],
+    device: DeviceModel,
+    *,
+    edges: Iterable[tuple[int, int]] = (),
+    edge_ids: set | None = None,
+    time_fn: Callable[[Sequence[KernelProfile]], float] | None = None,
+    budget: int = 2000,
+    model: str = "event",
+    neighborhood: str = "full",
+) -> tuple[list[KernelProfile], float, int]:
+    """Precedence-respecting hill-climb of a topological launch order.
+
+    ``edges`` are index pairs into the *given* ``order``; callers that
+    hold a :class:`~repro.graph.kernel_graph.KernelGraph` over a
+    permutation of these kernels pass
+    ``edge_ids=graph.edges_by_id()`` instead.  The move sets, budget
+    accounting (full-simulation equivalents) and delta evaluation are
+    those of :func:`repro.core.refine.refine_order`; the only
+    difference is the legality filter: a candidate that would place a
+    kernel before one of its predecessors is discarded before it costs
+    any simulation.  The returned order is therefore always a valid
+    topological order, and never modelled-worse than the input.
+    """
+    n = len(order)
+    base = list(order)
+    if edge_ids is None:
+        edge_ids = {(id(base[u]), id(base[v])) for u, v in set(edges)}
+    if neighborhood == "auto":
+        neighborhood = "full" if n <= 128 else "adjacent"
+    legal = _legal_mask(base, edge_ids)
+    if not legal(base):
+        raise ValueError("input order violates the precedence edges")
+    use_delta = time_fn is None and model in ("round", "event")
+    delta = DeltaEvaluator(device, model=model) if use_delta else None
+    if time_fn is None:
+        time_fn = lambda o: simulate(o, device, model=model)  # noqa: E731
+    best = base
+    best_t = delta.rebase(best) if use_delta else time_fn(best)
+    cost = 1.0
+    evals = 1
+    eval_cap = 10 * budget if use_delta else budget
+    improved = True
+    while improved and cost < budget and evals < eval_cap:
+        improved = False
+        moves = _moves(n, neighborhood)
+        if use_delta and neighborhood == "adjacent":
+            bounds = delta.boundaries()
+            if bounds is None:
+                moves.sort(key=lambda m: -m[0])
+            else:
+                near = [False] * (n + 1)
+                for b in bounds:
+                    for p in (b - 1, b, b + 1):
+                        if 0 <= p < n:
+                            near[p] = True
+                moves.sort(key=lambda m: (not (near[m[2]] or near[m[3]]),
+                                          -m[0]))
+        for first, kind, i, j in moves:
+            if cost >= budget or evals >= eval_cap:
+                break
+            cand = _apply(best, kind, i, j)
+            if not legal(cand):
+                continue  # rejected before simulation: costs nothing
+            if use_delta:
+                t, frac = delta.evaluate_costed(cand, first)
+                cost += frac
+            else:
+                t = time_fn(cand)
+                cost += 1.0
+            evals += 1
+            if t < best_t - 1e-15:
+                best, best_t, improved = cand, t, True
+                if use_delta:
+                    delta.rebase_incremental(best, first)
+    return best, best_t, evals

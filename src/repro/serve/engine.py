@@ -34,6 +34,9 @@ from repro.core.refine import refine_order
 from repro.core.tpu import (TpuWorkItem, decode_profile, fifo_rounds,
                             make_serving_device, prefill_profile,
                             round_time)
+from repro.graph.constrained import greedy_order_dag, refine_order_dag
+from repro.graph.kernel_graph import trace_arch
+from repro.graph.streams import fifo_rounds_dag
 from repro.models import transformer as T
 from repro.models.common import ModelConfig
 
@@ -58,6 +61,19 @@ class SchedulerPolicy:
     refine_budget: int = 200
     #: local-search move set for kind="refined" (see repro.core.refine)
     neighborhood: str = "auto"
+    #: Schedule the per-layer dependency graph instead of flat
+    #: per-request items: each live request expands into its traced
+    #: chain of layer-stage work items (repro.graph.trace_arch) and the
+    #: ready-set greedy (repro.graph.greedy_order_dag) composes rounds
+    #: that interleave *different* requests' stages while chains stay
+    #: ordered.  The ScheduleCache is bypassed on this path: fine-
+    #: grained patterns re-key every step as kv-lens drift across
+    #: layer-stage signatures.
+    respect_deps: bool = False
+    #: Optional stage coarsening for deep configs on the respect_deps
+    #: path (see trace_arch(max_stages=...)); None = one item per
+    #: layer stage.
+    dag_max_stages: int | None = None
     #: objective for kind="refined": "rounds" re-rounds every candidate
     #: under the TPU round cost model (weight stream charged once per
     #: round); "event" / "round" refine the flat launch order under the
@@ -74,6 +90,14 @@ class SchedulerPolicy:
     #: mix since a cached step), adapt the cached composition instead
     #: of recomputing greedy + guard + refine from scratch.
     warm_start: bool = True
+    #: Warm-start quality tracking: audit this fraction of warm hits
+    #: by also recomputing the cold greedy composition and recording
+    #: the modelled regret (warm time vs cold time, round cost model)
+    #: in ``ScheduleCache.stats()``.  Deterministic sampling (every
+    #: ``1/frac``-th warm hit).  Off by default: each audited hit
+    #: pays the full cold greedy the warm start exists to skip, so
+    #: only measurement runs (``benchmarks/serving.py``) opt in.
+    warm_audit_frac: float = 0.0
 
 
 #: Work-item signature: what makes two items schedule-equivalent.
@@ -108,6 +132,13 @@ class ScheduleCache:
         #: :meth:`near_miss`); every warm hit is also counted a miss,
         #: since :meth:`lookup` failed first.
         self.warm_hits = 0
+        #: warm-start quality audit (ROADMAP item): on a sampled
+        #: fraction of warm hits the engine also recomputes the cold
+        #: greedy composition and records the modelled regret
+        #: ``t_warm / t_cold - 1`` (round cost model; negative means
+        #: the adapted composition modelled *better* than cold).
+        self.warm_sampled = 0
+        self.warm_regret_total = 0.0
         self._store: OrderedDict[tuple, tuple[tuple[Signature, ...], ...]] \
             = OrderedDict()
 
@@ -171,9 +202,20 @@ class ScheduleCache:
         n = self.hits + self.misses
         return self.hits / n if n else 0.0
 
+    def record_warm_regret(self, regret: float) -> None:
+        self.warm_sampled += 1
+        self.warm_regret_total += regret
+
+    @property
+    def warm_regret_mean(self) -> float:
+        return (self.warm_regret_total / self.warm_sampled
+                if self.warm_sampled else 0.0)
+
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
                 "warm_hits": self.warm_hits,
+                "warm_sampled": self.warm_sampled,
+                "warm_regret_mean": self.warm_regret_mean,
                 "hit_rate": self.hit_rate, "entries": len(self._store)}
 
 
@@ -226,6 +268,106 @@ class ServingEngine:
                                     kv_bytes_per_token=kvb)
                 items.append((it, r, "decode"))
         return items
+
+    def _work_items_dag(self):
+        """Per-layer work items for the ``respect_deps`` path.
+
+        Every live request expands into its traced chain of layer-stage
+        items (:func:`repro.graph.trace_arch` over this engine's model
+        config and cost model).  Only the *tail* item of a chain
+        triggers real execution — kind ``"prefill"``/``"decode"`` —
+        because the engine executes a request's forward pass exactly,
+        as one unit; interior stages carry kind ``"frag"`` and exist
+        for round composition and modelled time only.  Returns
+        ``(triples, traced)``.
+        """
+        reqs = [r for r in self.queue if not r.done]
+        spec = []
+        for r in reqs:
+            if r.cache is None:
+                spec.append(("prefill", int(len(r.prompt))))
+            else:
+                spec.append(("decode", r.pos))
+        traced = trace_arch(self.cfg, spec, n_params=self.n_params,
+                            kv_bytes_per_token=self._kv_bytes_per_token(),
+                            max_stages=self.policy.dag_max_stages)
+        triples = []
+        for i, it in enumerate(traced.items):
+            owner = traced.owners[i]
+            r = reqs[owner]
+            if i == traced.tail_of[owner]:
+                kind = "prefill" if r.cache is None else "decode"
+            else:
+                kind = "frag"
+            triples.append((it, r, kind))
+        return triples, traced
+
+    @staticmethod
+    def _dag_stage_key(name: str) -> str:
+        """``r3:d:L0:attn`` -> ``L0:attn``: the layer stage, dropping
+        the owning request — co-scheduled copies of one stage share
+        its weight stream."""
+        return name.split(":", 2)[2]
+
+    def _dag_round_time(self, rd) -> float:
+        """Round time on the respect_deps path: the weight stream
+        charged is the sum over the round's *distinct* layer stages of
+        that stage's own parameter share (``TpuWorkItem.weight_bytes``,
+        set by trace_arch; max across copies, so a prefill stage that
+        touches the full expert bank dominates a routed decode copy).
+        Charging the engine-wide ``weights_bytes`` here would bill the
+        whole model once per stage round — many times per step."""
+        shares: dict[str, float] = {}
+        for it, _, _ in rd:
+            key = self._dag_stage_key(it.name)
+            shares[key] = max(shares.get(key, 0.0), it.weight_bytes)
+        return round_time([t[0] for t in rd], self.device,
+                          sum(shares.values()))
+
+    def _compose_dag(self, triples, traced) -> list[list]:
+        """Round composition over the per-layer dependency graph.
+
+        The ready-set greedy (:func:`repro.graph.greedy_order_dag`)
+        composes rounds that mix stages of *different* requests while
+        every chain stays ordered across rounds; ``kind="refined"``
+        additionally runs the precedence-respecting local search on
+        the flat order.  The usual cost-model guard compares against
+        the dependency-aware arrival-order packing
+        (:func:`repro.graph.fifo_rounds_dag`) — plain ``fifo_rounds``
+        could co-schedule a stage with its own predecessor.
+        """
+        profs = traced.graph.kernels
+        eids = traced.graph.edges_by_id()
+        by_name = {p.name: trip for p, trip in zip(profs, triples)}
+        dem = lambda k: k.demands  # noqa: E731 — profiles, not items
+
+        def to_rounds(prof_rounds):
+            return [[by_name[p.name] for p in rd] for rd in prof_rounds]
+
+        def modelled(rounds):
+            return sum(self._dag_round_time(rd) for rd in rounds)
+
+        fifo = to_rounds(fifo_rounds_dag(profs, self.device, eids,
+                                         demands_of=dem))
+        if self.policy.kind == "fifo":
+            return fifo
+        sched = greedy_order_dag(profs, self.device,
+                                 edges=traced.graph.edges)
+        if self.policy.kind == "refined":
+            model = (self.policy.refine_model
+                     if self.policy.refine_model in ("round", "event")
+                     else "round")
+            order, _, _ = refine_order_dag(
+                sched.order, self.device, edge_ids=eids, model=model,
+                budget=self.policy.refine_budget,
+                neighborhood=self.policy.neighborhood)
+            composed = to_rounds(fifo_rounds_dag(order, self.device,
+                                                 eids, demands_of=dem))
+        else:
+            composed = to_rounds([rd.kernels for rd in sched.rounds])
+        # Same guard as the flat path: never accept a composition the
+        # round cost model says is worse than (dep-aware) arrival order.
+        return fifo if modelled(fifo) < modelled(composed) else composed
 
     def _compose(self, items) -> list[list]:
         """Group pending work items into execution rounds per policy.
@@ -364,7 +506,22 @@ class ServingEngine:
             by_name = {t[0].name: t for t in items}
             result = [[by_name[it.name] for it in rd] for rd in fifo]
         else:
-            self.schedule_cache.warm_hits += 1
+            cache = self.schedule_cache
+            cache.warm_hits += 1
+            # Warm-start quality audit (deterministic sampling: the
+            # warm-hit counter crossing an integer multiple of 1/frac
+            # triggers a cold recompute; no RNG, so runs reproduce).
+            frac = self.policy.warm_audit_frac
+            if frac > 0 and (int(cache.warm_hits * frac) >
+                             int((cache.warm_hits - 1) * frac)):
+                sched = greedy_order_fast([t[0].profile() for t in items],
+                                          self.device)
+                nm = {t[0].name: t[0] for t in items}
+                t_cold = min(t_fifo, sum(
+                    round_time([nm[p.name] for p in rd.kernels],
+                               self.device, self.weights_bytes)
+                    for rd in sched.rounds))
+                cache.record_warm_regret(t_warm / max(t_cold, 1e-30) - 1.0)
         return result
 
     # -- execution -------------------------------------------------------
@@ -393,18 +550,32 @@ class ServingEngine:
 
     def step(self) -> int:
         """One scheduling iteration: compose rounds from the current
-        queue and execute them.  Returns the number of rounds run."""
-        items = self._work_items()
-        if not items:
-            return 0
+        queue and execute them.  Returns the number of rounds run.
+
+        On the ``respect_deps`` path a round may contain interior
+        chain stages (kind ``"frag"``): they contribute to the round's
+        modelled time but trigger no execution — the request's exact
+        forward pass runs once, at its chain's tail item."""
+        if self.policy.respect_deps:
+            triples, traced = self._work_items_dag()
+            if not triples:
+                return 0
+            rounds = self._compose_dag(triples, traced)
+            time_of = self._dag_round_time
+        else:
+            items = self._work_items()
+            if not items:
+                return 0
+            rounds = self._compose(items)
+            time_of = lambda rd: round_time(  # noqa: E731
+                [t[0] for t in rd], self.device, self.weights_bytes)
         n = 0
-        for rd in self._compose(items):
-            self._round_times.append(round_time(
-                [t[0] for t in rd], self.device, self.weights_bytes))
+        for rd in rounds:
+            self._round_times.append(time_of(rd))
             for it, r, kind in rd:
                 if kind == "prefill":
                     self._exec_prefill(r)
-                else:
+                elif kind == "decode":
                     self._exec_decode(r)
             n += 1
         return n

@@ -97,3 +97,27 @@ def test_warm_hits_surface_in_stats():
     assert c.stats()["warm_hits"] == 0
     c.warm_hits += 1
     assert c.stats()["warm_hits"] == 1
+
+
+def test_warm_regret_accounting():
+    """Warm-start quality audit (ROADMAP item): sampled warm hits
+    record their modelled regret; the mean surfaces in stats() and is
+    0.0 with no samples (not NaN)."""
+    c = ScheduleCache()
+    s = c.stats()
+    assert s["warm_sampled"] == 0 and s["warm_regret_mean"] == 0.0
+    c.record_warm_regret(0.10)
+    c.record_warm_regret(-0.02)
+    s = c.stats()
+    assert s["warm_sampled"] == 2
+    assert abs(s["warm_regret_mean"] - 0.04) < 1e-12
+
+
+def test_warm_audit_sampling_is_deterministic():
+    """The engine samples warm hits when the counter crosses integer
+    multiples of 1/frac — verify the crossing rule the engine uses."""
+    def sampled(seen, frac):
+        return int(seen * frac) > int((seen - 1) * frac)
+    assert [s for s in range(1, 9) if sampled(s, 0.25)] == [4, 8]
+    assert [s for s in range(1, 5) if sampled(s, 1.0)] == [1, 2, 3, 4]
+    assert [s for s in range(1, 9) if sampled(s, 0.0)] == []
