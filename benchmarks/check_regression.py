@@ -31,8 +31,10 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 import scaling  # noqa: E402
 
 #: cells whose wall time is a guarded hot path (``dag_fast`` is the
-#: ready-set constrained greedy, repro.graph.greedy_order_dag)
-_GUARDED_PATHS = ("fast", "event_delta", "dag_fast")
+#: ready-set constrained greedy, repro.graph.greedy_order_dag;
+#: ``slice_fast`` the lazy slice-aware greedy,
+#: repro.slice.greedy_order_slices)
+_GUARDED_PATHS = ("fast", "event_delta", "dag_fast", "slice_fast")
 
 
 def compare(committed: dict, fresh: dict, threshold: float,

@@ -10,7 +10,7 @@ import time
 
 def main() -> None:
     t0 = time.time()
-    from benchmarks import dag, fig1, roofline, serving, table3
+    from benchmarks import dag, fig1, roofline, serving, slicing, table3
     table3.run()
     print()
     fig1.run()
@@ -18,6 +18,8 @@ def main() -> None:
     serving.run()
     print()
     dag.run()
+    print()
+    slicing.run()
     print()
     roofline.run()
     print(f"\n# total benchmark wall time: {time.time() - t0:.1f}s")

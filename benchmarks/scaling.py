@@ -45,6 +45,7 @@ from repro.core.resources import (KernelProfile, bs_kernel, ep_kernel,
                                   es_kernel, sw_kernel)
 from repro.core.tpu import decode_profile, make_serving_device, prefill_profile
 from repro.graph import KernelGraph, greedy_order_dag
+from repro.slice import SlicePolicy, greedy_order_slices
 
 REFINE_BUDGET = 200
 NS = (8, 32, 128, 512, 1024)
@@ -151,6 +152,44 @@ def dag_construct(ks, edges, device) -> dict:
             "rounds": len(sched.rounds), "n_edges": len(edges)}
 
 
+def slice_mix(rng: random.Random, n: int) -> list[KernelProfile]:
+    """TPU serving mix with ~12% oversized prefill stages (tokens
+    above the 4096-slot round budget) — the workload shape the lazy
+    slice greedy exists for."""
+    out = []
+    for i in range(n):
+        u = rng.random()
+        if u < 0.12:
+            it = prefill_profile(f"P{i}", n_params=7e9,
+                                 seq_len=rng.choice([6144, 8192, 12288]),
+                                 kv_bytes_per_token=131072)
+        elif u < 0.3:
+            it = prefill_profile(f"p{i}", n_params=7e9,
+                                 seq_len=rng.choice([128, 256, 512, 1024]),
+                                 kv_bytes_per_token=131072)
+        else:
+            it = decode_profile(f"d{i}", n_params=7e9,
+                                kv_len=rng.randint(64, 8192),
+                                kv_bytes_per_token=131072)
+        out.append(it.profile())
+    return out
+
+
+def slice_construct(ks, edges, device) -> dict:
+    """Lazy slice-aware greedy construction
+    (``repro.slice.greedy_order_slices``); wall time is the guarded
+    quantity (``check_regression.py``, path="slice_fast")."""
+    t0 = time.perf_counter()
+    res = greedy_order_slices(ks, device, edges=edges,
+                              policy=SlicePolicy())
+    wall = time.perf_counter() - t0
+    assert res.graph().is_topological(res.order)
+    return {"path": "slice_fast", "wall_s": wall,
+            "rounds": len(res.rounds), "n_edges": len(res.edges),
+            "n_sliced": len(res.sliced),
+            "n_expanded": len(res.kernels)}
+
+
 def event_refine(ks, device, path: str) -> dict:
     """Event-model local search on the greedy order; returns wall time,
     evaluated moves and effective-move throughput."""
@@ -210,6 +249,19 @@ def run(max_ref_n: int = 512, seed: int = 0, max_event_full_n: int = 256,
         print_fn(f"gpu_dag,{n},{rec['path']},{rec['wall_s']:.4f},"
                  f"{rec['rounds']},{rec['n_edges']}")
         results.append({"scenario": "gpu_dag", "n": n, **rec})
+    print_fn("# Sliced-DAG construction (lazy slice greedy, oversized "
+             f"TPU serving mix, best of {repeats})")
+    print_fn("scenario,n,path,wall_s,rounds,n_sliced,n_expanded")
+    tpu_dev = make_serving_device()
+    for n in NS:
+        rng = random.Random(seed)
+        ks = slice_mix(rng, n)
+        edges = chain_edges(rng, n, width=max(4, n // 8))
+        rec = _best_of(repeats,
+                       lambda: slice_construct(ks, edges, tpu_dev))
+        print_fn(f"tpu_slice,{n},{rec['path']},{rec['wall_s']:.4f},"
+                 f"{rec['rounds']},{rec['n_sliced']},{rec['n_expanded']}")
+        results.append({"scenario": "tpu_slice", "n": n, **rec})
     print_fn("# Event-model refine: full re-sim vs checkpoint delta "
              f"(budget {EVENT_BUDGET} full-sim equivalents)")
     print_fn("scenario,n,path,wall_s,evals,moves_per_s,throughput_ratio")

@@ -274,20 +274,32 @@ def kv_bucket_sweep(buckets=(64, 128, 256, 512), *, seed: int = 0,
     t_cold = cold["modelled_time_s"]
     out = []
     print_fn("# ScheduleCache kv_bucket sensitivity (long-tail kv-lens)")
-    print_fn("kv_bucket,hit_rate,entries,modelled_regret_pct")
+    print_fn("kv_bucket,hit_rate,entries,regret_pct,revalidations,"
+             "optimistic_regret_pct")
     for b in buckets:
         st = run_once(SchedulerPolicy(kind="symbiotic", kv_bucket=b))
         assert st["outputs"] == cold["outputs"], "tokens must be exact"
+        # contrast run: optimistic replay (the pre-PR 4 behaviour,
+        # replay_drift_tol disabled) shows what the stale-replay
+        # re-validation buys at each bucket width
+        opt = run_once(SchedulerPolicy(kind="symbiotic", kv_bucket=b,
+                                       replay_drift_tol=0.0))
+        assert opt["outputs"] == cold["outputs"], "tokens must be exact"
         cache = st["schedule_cache"]
         rec = {"kv_bucket": b,
                "hit_rate": cache["hit_rate"],
                "hits": cache["hits"], "misses": cache["misses"],
                "entries": cache["entries"],
+               "replay_revalidations": cache["replay_revalidations"],
                "modelled_time_s": st["modelled_time_s"],
-               "modelled_regret": st["modelled_time_s"] / t_cold - 1.0}
+               "modelled_regret": st["modelled_time_s"] / t_cold - 1.0,
+               "optimistic_regret":
+                   opt["modelled_time_s"] / t_cold - 1.0}
         out.append(rec)
         print_fn(f"{b},{rec['hit_rate']:.3f},{rec['entries']},"
-                 f"{rec['modelled_regret'] * 100:.2f}")
+                 f"{rec['modelled_regret'] * 100:.2f},"
+                 f"{rec['replay_revalidations']},"
+                 f"{rec['optimistic_regret'] * 100:.2f}")
     return out
 
 

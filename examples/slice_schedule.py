@@ -1,0 +1,58 @@
+"""Slice an oversized-stage model graph: trace a prefill-heavy
+continuous-batching snapshot whose prefill stages exceed the device's
+slot budget, schedule it with the unsliced ready-set greedy and with
+the lazy slice-aware greedy (Kernelet-style), and compare gated
+makespans against random topological launch orders — the paper's
+Fig. 1 protocol on the sliced design space.
+
+  PYTHONPATH=src python examples/slice_schedule.py
+"""
+
+from repro.configs import get_config
+from repro.core import percentile_rank
+from repro.core.tpu import make_serving_device
+from repro.graph import DagEventSimulator, greedy_order_dag, trace_arch
+from repro.slice import SlicePolicy, greedy_order_slices, refine_order_slices
+
+#: two prompts past the 4096-slot round budget mid-prefill, a decode
+#: backlog supplying memory-bound work for the slices to co-execute.
+REQUESTS = ([("prefill", 8192), ("prefill", 6144)] +
+            [("decode", 2048 + 3072 * i) for i in range(12)])
+
+
+def main():
+    device = make_serving_device()
+    for arch in ("mixtral-8x7b", "deepseek-v2-236b"):
+        cfg = get_config(arch, "full")
+        traced = trace_arch(cfg, REQUESTS, max_stages=8)
+        g = traced.graph
+        g.validate()
+
+        un = greedy_order_dag(g.kernels, device, edges=g.edges)
+        t_un = DagEventSimulator(device, g.edges_by_id()).simulate(un.order)
+
+        res = greedy_order_slices(g.kernels, device, edges=g.edges,
+                                  policy=SlicePolicy())
+        sim = DagEventSimulator(device, res.edges_by_id())
+        t_sl = sim.simulate(res.order)
+        order, _, _ = refine_order_slices(res, device, budget=40,
+                                          model="event")
+        t_ref = min(sim.simulate(order), t_sl)
+
+        rand = [sim.simulate(o) for o in
+                res.graph().random_topological_orders(200, seed=1)]
+        pct = percentile_rank(t_sl, rand)
+        med = sorted(rand)[len(rand) // 2]
+
+        print(f"{arch}: {g.n} nodes -> {len(res.kernels)} after slicing "
+              f"{len(res.sliced)} oversized stages "
+              f"({res.passes} lazy pass(es))")
+        print(f"  unsliced greedy   {t_un * 1e3:9.1f} ms")
+        print(f"  sliced greedy     {t_sl * 1e3:9.1f} ms  "
+              f"({(t_un / t_sl - 1) * 100:+.1f}%, beats {pct:.0f}% of 200 "
+              f"random topological orders; median {med * 1e3:.1f} ms)")
+        print(f"  + slice refine    {t_ref * 1e3:9.1f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,14 @@ serving configs.  Flat-order callers keep using
   incremental greedy) + :func:`refine_order_dag` (legal local search),
 * :mod:`repro.graph.streams` — :func:`assign_streams` (k launch
   queues) + :class:`DagEventSimulator` (gated makespan model).
+
+When a workload carries *oversized* stages — profiles that saturate a
+device capacity on their own (long prefill chunks against the slot
+budget), which the ready-set greedy can only serialize into solo
+rounds — go one layer up to :mod:`repro.slice`:
+``greedy_order_slices`` lazily cuts exactly those stages into
+co-schedulable slices (Kernelet-style) and degenerates to
+``greedy_order_dag`` bit-for-bit when nothing triggers.
 """
 
 from .constrained import greedy_order_dag, refine_order_dag

@@ -65,6 +65,12 @@ def greedy_order_dag(kernels: Sequence[KernelProfile],
     complete before v starts.  Raises ``ValueError`` on a cycle.  With
     ``edges=()`` this is exactly ``greedy_order_fast`` — same rounds,
     same intra-round order, same tie-breaking.
+
+    A stage whose profile saturates a device capacity on its own can
+    only ever land in a solo round here; callers with such oversized
+    stages should use :func:`repro.slice.greedy_order_slices`, which
+    wraps this greedy and lazily cuts exactly those stages into
+    co-schedulable slices.
     """
     n = len(kernels)
     if n == 0:

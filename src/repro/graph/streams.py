@@ -160,6 +160,15 @@ class DagEventSimulator:
     drained).  Launch order must therefore be topological; a
     non-topological order deadlocks the gate and raises ``ValueError``
     instead of spinning.
+
+    Zero-work kernels (no instructions, no demands — the synthetic
+    join markers slice expansion introduces, see
+    :func:`repro.slice.slicer.join_profile`) are pure synchronisation
+    points: once their predecessors have drained they retire
+    *instantly* without occupying a unit or joining a cohort, so a
+    join never inflates the gated makespan.  No kernel outside the
+    slice subsystem is zero-work, so ungated runs (the 0-edge
+    float-identity pin vs ``EventSimulator``) are unaffected.
     """
 
     device: DeviceModel
@@ -177,6 +186,10 @@ class DagEventSimulator:
         def ready(k: KernelProfile) -> bool:
             return all(retired.get(p, 0) >= grid.get(p, 0)
                        for p in preds.get(id(k), []))
+
+        def zero_work(k: KernelProfile) -> bool:
+            return (k.inst_per_block == 0.0 and
+                    all(k.demands.get(d, 0.0) == 0.0 for d in dev.caps))
 
         units = [_Unit(used={d: 0.0 for d in dims})
                  for _ in range(dev.n_units)]
@@ -196,6 +209,12 @@ class DagEventSimulator:
                 k, _ = pending[0]
                 if not ready(k):
                     break  # admission gate: predecessors still in flight
+                if zero_work(k):
+                    # Synchronisation marker (slice join): retires the
+                    # instant its predecessors drain, occupying nothing.
+                    retired[id(k)] = grid[id(k)]
+                    pending.popleft()
+                    continue
                 placed = False
                 for off in range(dev.n_units):
                     ui = (rr + off) % dev.n_units

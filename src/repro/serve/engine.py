@@ -37,6 +37,7 @@ from repro.core.tpu import (TpuWorkItem, decode_profile, fifo_rounds,
 from repro.graph.constrained import greedy_order_dag, refine_order_dag
 from repro.graph.kernel_graph import trace_arch
 from repro.graph.streams import fifo_rounds_dag
+from repro.slice import KernelSlicer, greedy_order_slices, join_item
 from repro.models import transformer as T
 from repro.models.common import ModelConfig
 
@@ -66,10 +67,23 @@ class SchedulerPolicy:
     #: chain of layer-stage work items (repro.graph.trace_arch) and the
     #: ready-set greedy (repro.graph.greedy_order_dag) composes rounds
     #: that interleave *different* requests' stages while chains stay
-    #: ordered.  The ScheduleCache is bypassed on this path: fine-
-    #: grained patterns re-key every step as kv-lens drift across
-    #: layer-stage signatures.
+    #: ordered.  The ScheduleCache participates with coarsened keys:
+    #: instead of per-item layer-stage signatures (which re-key every
+    #: step as kv-lens drift), the key is the multiset of per-request
+    #: *chain* signatures (kind, kv bucket, stage count), so
+    #: decode-heavy steady state gets warm hits on this path too
+    #: (``dag_hits`` in ``ScheduleCache.stats()``).
     respect_deps: bool = False
+    #: Kernelet-style slicing (repro.slice) on the respect_deps path:
+    #: when set, a stage the ready-set greedy cannot pack with any
+    #: frontier peer (a solo round) is cut per this
+    #: :class:`repro.slice.SlicePolicy` into co-schedulable slices
+    #: with exact accounting — slice profiles sum to the parent and
+    #: the stage weight stream is still charged once per round.
+    #: Default off.  Slicing only reshapes modelled rounds; chain
+    #: tails still trigger exact execution (moved to the slice join),
+    #: so generated tokens are bit-identical with or without it.
+    slice_policy: object | None = None
     #: Optional stage coarsening for deep configs on the respect_deps
     #: path (see trace_arch(max_stages=...)); None = one item per
     #: layer stage.
@@ -90,6 +104,15 @@ class SchedulerPolicy:
     #: mix since a cached step), adapt the cached composition instead
     #: of recomputing greedy + guard + refine from scratch.
     warm_start: bool = True
+    #: Stale-replay re-validation: a replayed cached pattern whose
+    #: modelled time drifts more than this fraction from the time
+    #: recorded when the pattern was stored — or whose rounds no
+    #: longer fit device capacity on actual demands — is not replayed
+    #: optimistically; the engine re-validates and recomposes cold
+    #: (counted as ``replay_revalidations`` in
+    #: ``ScheduleCache.stats()``).  <= 0 disables (legacy optimistic
+    #: replay).
+    replay_drift_tol: float = 0.05
     #: Warm-start quality tracking: audit this fraction of warm hits
     #: by also recomputing the cold greedy composition and recording
     #: the modelled regret (warm time vs cold time, round cost model)
@@ -132,6 +155,13 @@ class ScheduleCache:
         #: :meth:`near_miss`); every warm hit is also counted a miss,
         #: since :meth:`lookup` failed first.
         self.warm_hits = 0
+        #: hits served on the respect_deps path (coarsened per-request
+        #: chain-signature keys); a subset of ``hits``.
+        self.dag_hits = 0
+        #: replays rejected by the stale-replay re-validation (modelled
+        #: drift above ``SchedulerPolicy.replay_drift_tol`` or a
+        #: capacity violation on actual demands) and recomposed cold.
+        self.replay_revalidations = 0
         #: warm-start quality audit (ROADMAP item): on a sampled
         #: fraction of warm hits the engine also recomputes the cold
         #: greedy composition and records the modelled regret
@@ -141,6 +171,10 @@ class ScheduleCache:
         self.warm_regret_total = 0.0
         self._store: OrderedDict[tuple, tuple[tuple[Signature, ...], ...]] \
             = OrderedDict()
+        #: modelled time of the composition each pattern was stored
+        #: from (same key space as ``_store``); the baseline the
+        #: stale-replay drift check compares against.
+        self._times: dict[tuple, float | None] = {}
 
     def signature(self, kind: str, length: int) -> Signature:
         if kind == "decode":
@@ -161,14 +195,22 @@ class ScheduleCache:
         return pat
 
     def store(self, key: tuple,
-              pattern: tuple[tuple[Signature, ...], ...]) -> None:
+              pattern: tuple[tuple[Signature, ...], ...],
+              t_model: float | None = None) -> None:
         self._store[key] = pattern
+        self._times[key] = t_model
         # Assigning to an existing key does NOT reorder an OrderedDict:
         # without this, a refreshed entry keeps its stale position and
         # is evicted as if it were never re-stored.
         self._store.move_to_end(key)
         if len(self._store) > self.max_entries:
-            self._store.popitem(last=False)
+            old, _ = self._store.popitem(last=False)
+            self._times.pop(old, None)
+
+    def time_of(self, key: tuple) -> float | None:
+        """Modelled time recorded when ``key``'s pattern was stored
+        (None for patterns stored without one)."""
+        return self._times.get(key)
 
     def near_miss(self, key: tuple):
         """Cached entry whose signature multiset differs from ``key``
@@ -214,6 +256,8 @@ class ScheduleCache:
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
                 "warm_hits": self.warm_hits,
+                "dag_hits": self.dag_hits,
+                "replay_revalidations": self.replay_revalidations,
                 "warm_sampled": self.warm_sampled,
                 "warm_regret_mean": self.warm_regret_mean,
                 "hit_rate": self.hit_rate, "entries": len(self._store)}
@@ -306,8 +350,11 @@ class ServingEngine:
     def _dag_stage_key(name: str) -> str:
         """``r3:d:L0:attn`` -> ``L0:attn``: the layer stage, dropping
         the owning request — co-scheduled copies of one stage share
-        its weight stream."""
-        return name.split(":", 2)[2]
+        its weight stream.  Slice metadata after ``#``
+        (``r3:d:L0:attn#s1of4``, ``...#join``) is stripped too: slices
+        of one stage share the *parent's* stream, so a round charges
+        it once per distinct parent stage, never per slice."""
+        return name.split(":", 2)[2].split("#", 1)[0]
 
     def _dag_round_time(self, rd) -> float:
         """Round time on the respect_deps path: the weight stream
@@ -331,43 +378,258 @@ class ServingEngine:
         composes rounds that mix stages of *different* requests while
         every chain stays ordered across rounds; ``kind="refined"``
         additionally runs the precedence-respecting local search on
-        the flat order.  The usual cost-model guard compares against
-        the dependency-aware arrival-order packing
-        (:func:`repro.graph.fifo_rounds_dag`) — plain ``fifo_rounds``
-        could co-schedule a stage with its own predecessor.
+        the flat order.  With ``policy.slice_policy`` set the greedy
+        is the slice-aware one
+        (:func:`repro.slice.greedy_order_slices`): stages it cannot
+        pack are cut into co-schedulable slices, with the chain tail's
+        exact execution moved to the slice join.  The usual cost-model
+        guard compares against the dependency-aware arrival-order
+        packing (:func:`repro.graph.fifo_rounds_dag`) — plain
+        ``fifo_rounds`` could co-schedule a stage with its own
+        predecessor.
+
+        The ScheduleCache participates with coarsened per-request
+        *chain* signatures (kind, kv bucket, stage count) so that
+        steady-state decode mixes replay cached DAG patterns
+        (``dag_hits``); replayed patterns pass the same stale-replay
+        re-validation as the flat path.
         """
         profs = traced.graph.kernels
         eids = traced.graph.edges_by_id()
         by_name = {p.name: trip for p, trip in zip(profs, triples)}
         dem = lambda k: k.demands  # noqa: E731 — profiles, not items
 
-        def to_rounds(prof_rounds):
-            return [[by_name[p.name] for p in rd] for rd in prof_rounds]
-
         def modelled(rounds):
             return sum(self._dag_round_time(rd) for rd in rounds)
 
-        fifo = to_rounds(fifo_rounds_dag(profs, self.device, eids,
-                                         demands_of=dem))
+        fifo = [[by_name[p.name] for p in rd]
+                for rd in fifo_rounds_dag(profs, self.device, eids,
+                                          demands_of=dem)]
         if self.policy.kind == "fifo":
             return fifo
-        sched = greedy_order_dag(profs, self.device,
-                                 edges=traced.graph.edges)
+        key = labels = None
+        if self.policy.cache:
+            key, labels = self._dag_key_and_labels(triples, traced)
+            pattern = self.schedule_cache.lookup(key)
+            if pattern is not None:
+                replay = self._dag_apply_pattern(pattern, triples,
+                                                 labels)
+                if replay is not None and self._replay_ok(
+                        key, replay, self._dag_round_time):
+                    # Counted a hit only when the replay is actually
+                    # served; rejected/failed replays recompose cold.
+                    self.schedule_cache.dag_hits += 1
+                    # The replay honours the same fifo guard as a cold
+                    # composition, so the "never modelled-worse than
+                    # dep-aware arrival order" invariant survives
+                    # cache hits.
+                    if modelled(fifo) < modelled(replay):
+                        return fifo
+                    return replay
+        sp = self.policy.slice_policy
+        if sp is None:
+            sched = greedy_order_dag(profs, self.device,
+                                     edges=traced.graph.edges)
+            names, sl_eids = by_name, eids
+        else:
+            slicer = KernelSlicer(sp, self.device)
+            extra: dict[str, tuple] = {}
+
+            def mk_slices(prof, k):
+                it, r, kind = by_name[prof.name]
+                parts = slicer.slice_item(it, k)
+                for part in parts:
+                    extra[part.name] = (part, r, "frag")
+                ji = join_item(it)
+                # The chain tail's exact execution moves to the join:
+                # it still runs exactly once, after every slice.
+                extra[ji.name] = (ji, r, kind)
+                return [part.profile() for part in parts]
+
+            def mk_join(prof):
+                return extra[prof.name.split("#", 1)[0] + "#join"][0] \
+                    .profile()
+
+            sl = greedy_order_slices(profs, self.device,
+                                     edges=traced.graph.edges,
+                                     policy=sp, make_slices=mk_slices,
+                                     make_join=mk_join)
+            sched = sl.schedule
+            names = dict(by_name)
+            names.update(extra)
+            sl_eids = sl.edges_by_id()
         if self.policy.kind == "refined":
             model = (self.policy.refine_model
                      if self.policy.refine_model in ("round", "event")
                      else "round")
             order, _, _ = refine_order_dag(
-                sched.order, self.device, edge_ids=eids, model=model,
+                sched.order, self.device, edge_ids=sl_eids, model=model,
                 budget=self.policy.refine_budget,
                 neighborhood=self.policy.neighborhood)
-            composed = to_rounds(fifo_rounds_dag(order, self.device,
-                                                 eids, demands_of=dem))
+            prof_rounds = fifo_rounds_dag(order, self.device, sl_eids,
+                                          demands_of=dem)
         else:
-            composed = to_rounds([rd.kernels for rd in sched.rounds])
+            prof_rounds = [rd.kernels for rd in sched.rounds]
+        composed = [[names[p.name] for p in rd] for rd in prof_rounds]
         # Same guard as the flat path: never accept a composition the
         # round cost model says is worse than (dep-aware) arrival order.
-        return fifo if modelled(fifo) < modelled(composed) else composed
+        result = fifo if modelled(fifo) < modelled(composed) else composed
+        if key is not None:
+            self._dag_store(key, result, labels)
+        return result
+
+    # -- DAG-path ScheduleCache (coarsened chain signatures) -----------
+    def _dag_key_and_labels(self, triples, traced):
+        """Cache key + per-item labels for the respect_deps path.
+
+        Fine-grained layer-stage signatures re-key every step (kv-lens
+        drift through every attention stage), so the key coarsens to
+        the multiset of per-request *chain* signatures: (kind-bucketed
+        length via :meth:`ScheduleCache.signature`, chain stage
+        count).  Items are labelled ``(chain_sig, rank, chain_pos)``
+        — requests with equal signatures are interchangeable, ranked
+        by arrival order — which is what lets a cached round pattern
+        replay onto a signature-equivalent step.
+        """
+        cache = self.schedule_cache
+        owners = traced.owners
+        n_req = len(traced.tail_of)
+        chain_len = [0] * n_req
+        for o in owners:
+            chain_len[o] += 1
+        chain_sig = []
+        for rid in range(n_req):
+            it, r, kind = triples[traced.tail_of[rid]]
+            length = r.pos if kind == "decode" else it.tokens
+            chain_sig.append((cache.signature(kind, length),
+                              chain_len[rid]))
+        seen = Counter()
+        rank = []
+        for s in chain_sig:
+            rank.append(seen[s])
+            seen[s] += 1
+        labels = {}
+        pos_ctr = [0] * n_req
+        for i, (it, _, _) in enumerate(triples):
+            rid = owners[i]
+            labels[it.name] = (chain_sig[rid], rank[rid], pos_ctr[rid])
+            pos_ctr[rid] += 1
+        key = ("dag", self.policy.kind,
+               ScheduleCache.key_of(chain_sig))
+        return key, labels
+
+    def _dag_store(self, key, result, labels) -> None:
+        """Store a DAG composition as a label pattern.  Sliced items
+        record their slice tag alongside the parent stage's label so a
+        replay can re-cut a signature-equivalent step identically."""
+        def label_of(name):
+            parent, _, sub = name.partition("#")
+            return labels[parent] + (sub,)
+        try:
+            pattern = tuple(tuple(label_of(t[0].name) for t in rd)
+                            for rd in result)
+        except KeyError:           # defensive: unlabelled item
+            return
+        t_model = sum(self._dag_round_time(rd) for rd in result)
+        self.schedule_cache.store(key, pattern, t_model)
+
+    def _dag_apply_pattern(self, pattern, triples, labels):
+        """Replay a cached DAG pattern onto the current step.
+
+        Whole-stage labels map straight onto the current traced items;
+        labels carrying slice tags re-cut the current stage with the
+        cached slice count (exact accounting on *current* demands —
+        the replayed modelled time is honest, which is what the drift
+        re-validation inspects).  Any mismatch — a label the current
+        step lacks, a slice count the stage can no longer support —
+        returns None and the engine recomposes cold."""
+        by_label = {}
+        for trip in triples:
+            by_label[labels[trip[0].name]] = trip
+        # slice counts demanded per parent label
+        need: dict[tuple, int] = {}
+        for rd in pattern:
+            for lab in rd:
+                *parent, sub = lab
+                if sub.startswith("s"):
+                    try:
+                        k = int(sub.split("of", 1)[1])
+                    except (IndexError, ValueError):
+                        return None
+                    need[tuple(parent)] = k
+                elif sub not in ("", "join"):
+                    return None
+        sp = self.policy.slice_policy
+        expanded: dict[tuple, tuple] = {}
+        if need:
+            if sp is None:
+                return None
+            slicer = KernelSlicer(sp, self.device)
+            for parent, k in need.items():
+                trip = by_label.get(parent)
+                if trip is None:
+                    return None
+                it, r, kind = trip
+                parts = slicer.slice_item(it, k)
+                if len(parts) != k:
+                    return None  # stage can no longer support the cut
+                for j, part in enumerate(parts):
+                    expanded[parent + (f"s{j}of{k}",)] = (part, r, "frag")
+                expanded[parent + ("join",)] = (join_item(it), r, kind)
+        out = []
+        used = set()
+        for rd in pattern:
+            row = []
+            for lab in rd:
+                if lab in used:
+                    return None
+                used.add(lab)
+                *parent, sub = lab
+                trip = (expanded.get(lab) if sub
+                        else by_label.get(tuple(parent)))
+                if trip is None:
+                    return None
+                row.append(trip)
+            out.append(row)
+        # every current item must be covered exactly once
+        want = {labels[t[0].name] + ("",) for t in triples}
+        got = {(lab if lab[-1] == "" else tuple(lab[:-1]) + ("",))
+               for lab in used}
+        if got != want:
+            return None
+        return out
+
+    def _round_fits(self, rd) -> bool:
+        """Capacity re-check of one replayed round on actual demands
+        (solo rounds are always legal — oversized stages run alone)."""
+        if len(rd) <= 1:
+            return True
+        used = {d: 0.0 for d in self.device.caps}
+        for it, _, _ in rd:
+            for d, v in it.profile().demands.items():
+                if d in used:  # items may demand untracked dims
+                    used[d] += v
+        return all(used[d] <= self.device.cap(d) * (1 + 1e-9)
+                   for d in used)
+
+    def _replay_ok(self, key, rounds, time_of) -> bool:
+        """Stale-replay re-validation (ROADMAP item): a replayed
+        pattern whose modelled time drifts beyond
+        ``policy.replay_drift_tol`` from the stored composition's — or
+        that violates capacity on actual demands — is rejected and the
+        step recomposes cold."""
+        tol = self.policy.replay_drift_tol
+        if tol is None or tol <= 0:
+            return True            # legacy optimistic replay
+        cache = self.schedule_cache
+        t0 = cache.time_of(key)
+        t_now = sum(time_of(rd) for rd in rounds)
+        drifted = (t0 is not None and t0 > 0 and
+                   abs(t_now / t0 - 1.0) > tol)
+        if drifted or not all(self._round_fits(rd) for rd in rounds):
+            cache.replay_revalidations += 1
+            return False
+        return True
 
     def _compose(self, items) -> list[list]:
         """Group pending work items into execution rounds per policy.
@@ -380,12 +642,21 @@ class ServingEngine:
             return [[by_name[it.name] for it in rd] for rd in rounds]
         sigs = [self._signature(trip) for trip in items]
         key = None
+        stale = False
         if self.policy.cache:
             key = (self.policy.kind, ScheduleCache.key_of(sigs))
             pattern = self.schedule_cache.lookup(key)
             if pattern is not None:
-                return self._apply_pattern(pattern, items, sigs)
-            if self.policy.warm_start:
+                replay = self._apply_pattern(pattern, items, sigs)
+                if self._replay_ok(key, replay, self._flat_round_time):
+                    return replay
+                # Stale replay: recompose cold (the fresh composition
+                # re-stores under the same key).  Warm-start adaptation
+                # is skipped too — a one-signature-away pattern shares
+                # the rejected pattern's staleness and performs no
+                # capacity/drift re-validation of its own.
+                stale = True
+            if self.policy.warm_start and not stale:
                 warm = self.schedule_cache.near_miss(key)
                 if warm is not None:
                     result = self._warm_adapt(warm, items, sigs)
@@ -442,12 +713,17 @@ class ServingEngine:
         length = r.pos if kind == "decode" else it.tokens
         return self.schedule_cache.signature(kind, length)
 
+    def _flat_round_time(self, rd) -> float:
+        return round_time([t[0] for t in rd], self.device,
+                          self.weights_bytes)
+
     def _cache_store(self, key, result, items, sigs):
         if key is not None:
             name_sig = {trip[0].name: s for trip, s in zip(items, sigs)}
             pattern = tuple(tuple(name_sig[t[0].name] for t in rd)
                             for rd in result)
-            self.schedule_cache.store(key, pattern)
+            t_model = sum(self._flat_round_time(rd) for rd in result)
+            self.schedule_cache.store(key, pattern, t_model)
         return result
 
     def _apply_pattern(self, pattern, items, sigs):

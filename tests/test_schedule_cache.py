@@ -113,6 +113,35 @@ def test_warm_regret_accounting():
     assert abs(s["warm_regret_mean"] - 0.04) < 1e-12
 
 
+def test_store_records_model_time_for_drift_checks():
+    """Stale-replay re-validation (ROADMAP item) compares the replayed
+    composition's modelled time against the one recorded at store
+    time; patterns stored without a time opt out (None)."""
+    c = ScheduleCache()
+    c.store(("k", 1), (), 0.125)
+    c.store(("k", 2), ())
+    assert c.time_of(("k", 1)) == 0.125
+    assert c.time_of(("k", 2)) is None
+    assert c.time_of(("k", 3)) is None      # never stored
+    # eviction drops the recorded time alongside the pattern
+    small = ScheduleCache(max_entries=2)
+    small.store(("k", 1), (), 1.0)
+    small.store(("k", 2), (), 2.0)
+    small.store(("k", 3), (), 3.0)
+    assert small.time_of(("k", 1)) is None
+    assert small.time_of(("k", 3)) == 3.0
+
+
+def test_new_counters_surface_in_stats():
+    c = ScheduleCache()
+    s = c.stats()
+    assert s["dag_hits"] == 0 and s["replay_revalidations"] == 0
+    c.dag_hits += 2
+    c.replay_revalidations += 1
+    s = c.stats()
+    assert s["dag_hits"] == 2 and s["replay_revalidations"] == 1
+
+
 def test_warm_audit_sampling_is_deterministic():
     """The engine samples warm hits when the counter crosses integer
     multiples of 1/frac — verify the crossing rule the engine uses."""
