@@ -33,8 +33,11 @@ import scaling  # noqa: E402
 #: cells whose wall time is a guarded hot path (``dag_fast`` is the
 #: ready-set constrained greedy, repro.graph.greedy_order_dag;
 #: ``slice_fast`` the lazy slice-aware greedy,
-#: repro.slice.greedy_order_slices)
-_GUARDED_PATHS = ("fast", "event_delta", "dag_fast", "slice_fast")
+#: repro.slice.greedy_order_slices; ``dag_refine_gated`` the gated
+#: delta-refinement path, repro.graph.delta.GatedDeltaEvaluator via
+#: refine_order_dag(model="gated"))
+_GUARDED_PATHS = ("fast", "event_delta", "dag_fast", "slice_fast",
+                  "dag_refine_gated")
 
 
 def compare(committed: dict, fresh: dict, threshold: float,
@@ -85,10 +88,13 @@ def main(argv=None) -> int:
     max_ref = 0 if args.quick else committed.get("max_ref_n", 512)
     max_event_full = (0 if args.quick
                       else committed.get("max_event_full_n", 256))
+    max_gated_full = (0 if args.quick
+                      else committed.get("max_gated_full_n", 128))
     repeats = (args.repeats if args.repeats is not None
                else committed.get("repeats", 2))
     fresh = scaling.run(max_ref_n=max_ref,
                         max_event_full_n=max_event_full,
+                        max_gated_full_n=max_gated_full,
                         repeats=repeats)
     if args.out:
         with open(args.out, "w") as f:

@@ -10,14 +10,29 @@ event model (``DagEventSimulator`` — dependent kernels never overlap),
 for
 
 * traced architecture workloads (``trace_arch`` over full model
-  configs: per-layer chains of a continuous-batching snapshot), and
+  configs: per-layer chains of a continuous-batching snapshot), on the
+  single-core serving device AND on a 4-core serving slice
+  (``make_serving_device(n_units=4)``, rows suffixed ``@x4``), and
 * a synthetic layered GPU-kernel DAG on the paper's GTX 580 model.
 
-Reported per workload: modelled makespan of the constrained greedy and
-of the precedence-respecting refinement, the percentile rank inside
-the sampled design space, and the median-vs-greedy gain.  The
-acceptance bar (ISSUE 3) is the greedy beating the sample median on
->= 2 traced arch workloads.
+Refinement rows use ``refine_order_dag(model="gated")`` — the
+precedence-respecting local search delta-evaluated *in the gated
+currency itself* (``repro.graph.delta.GatedDeltaEvaluator``), so the
+reported refined time IS the gated makespan of the refined order, no
+greedy fallback involved.  On the single-core device the ready-set
+greedy's aligned rounds are a local optimum of the swap/reinsert
+neighbourhood (all cohorts admitted at one instant finish together —
+measured: zero improving legal moves on all three archs), so the
+refined rows match the greedy there; the ``@x4`` multi-core rows are
+where placement and under-occupancy make the gated makespan genuinely
+order-sensitive and refinement strictly beats the greedy (the ISSUE-5
+acceptance bar: strict refined-vs-greedy wins on >= 2 traced archs).
+
+Reported per workload: modelled gated makespan of the constrained
+greedy and of the gated refinement, percentile ranks inside the
+sampled design space, and the median-vs-greedy gain.  The ISSUE-3
+acceptance bar (greedy beats the sample median on >= 2 traced arch
+workloads) is retained.
 
 Emits ``BENCH_dag.json``.  Run:
   PYTHONPATH=src python benchmarks/dag.py
@@ -81,25 +96,32 @@ def _evaluate(name: str, graph: KernelGraph, device, *,
     wall = time.perf_counter() - t0
     assert graph.is_topological(sched.order)
     t_alg = sim.simulate(sched.order)
-    order, _, _ = refine_order_dag(sched.order, device, edge_ids=eids,
-                                   budget=refine_budget, model="event",
-                                   neighborhood="adjacent")
+    # Gated refinement: the hill-climb's objective IS the gated
+    # makespan (delta-evaluated suffix re-simulation), so t_ref is the
+    # true gated time of the refined order — never worse than greedy.
+    t0 = time.perf_counter()
+    order, t_ref, refine_evals = refine_order_dag(
+        sched.order, device, edge_ids=eids, budget=refine_budget,
+        model="gated", neighborhood="adjacent")
+    refine_wall = time.perf_counter() - t0
     assert graph.is_topological(order)
-    # The refinement objective is the ungated event model (the delta-
-    # evaluable proxy); under the gated currency the greedy order
-    # remains the fallback, same convention as refine_order itself.
-    t_ref = min(sim.simulate(order), t_alg)
+    assert abs(t_ref - sim.simulate(order)) <= 1e-12 * max(t_ref, 1.0)
     rand = sorted(sim.simulate(o) for o in
                   graph.random_topological_orders(n_random, seed=seed))
     med = rand[len(rand) // 2]
     return {
         "workload": name,
+        "device": device.name,
         "n_nodes": graph.n,
         "n_edges": len(graph.edges),
         "rounds": len(sched.rounds),
         "construct_wall_s": wall,
+        "refine_wall_s": refine_wall,
+        "refine_evals": refine_evals,
         "greedy_time_s": t_alg,
         "refined_time_s": t_ref,
+        "refined_gain_pct": (t_alg / t_ref - 1.0) * 100.0,
+        "refine_beats_greedy": t_ref < t_alg,
         "n_random_orders": n_random,
         "random_median_s": med,
         "random_best_s": rand[0],
@@ -112,16 +134,25 @@ def _evaluate(name: str, graph: KernelGraph, device, *,
 
 
 def run(n_random: int = N_RANDOM, seed: int = 1,
-        refine_budget: int = 60, print_fn=print) -> dict:
+        refine_budget: int = 200, print_fn=print) -> dict:
     device = make_serving_device()
+    slice_dev = make_serving_device(n_units=4)
     results = []
     print_fn("# DAG scheduling vs random topological orders "
-             f"({n_random} samples, gated event model)")
+             f"({n_random} samples, gated event model, "
+             "gated-delta refinement)")
     print_fn("workload,nodes,edges,rounds,greedy_ms,refined_ms,"
-             "median_ms,percentile,median_gain_pct")
+             "refine_gain_pct,median_ms,percentile,median_gain_pct")
     for arch in ARCH_WORKLOADS:
         traced = trace_arch(get_config(arch, "full"), max_stages=16)
         rec = _evaluate(f"arch:{arch}", traced.graph, device,
+                        n_random=n_random, seed=seed,
+                        refine_budget=refine_budget)
+        results.append(rec)
+        # The multi-core slice rows: placement across cores makes the
+        # gated makespan order-sensitive beyond round composition —
+        # the regime where gated refinement beats the greedy.
+        rec = _evaluate(f"arch:{arch}@x4", traced.graph, slice_dev,
                         n_random=n_random, seed=seed,
                         refine_budget=refine_budget)
         results.append(rec)
@@ -134,19 +165,30 @@ def run(n_random: int = N_RANDOM, seed: int = 1,
         print_fn(f"{r['workload']},{r['n_nodes']},{r['n_edges']},"
                  f"{r['rounds']},{r['greedy_time_s'] * 1e3:.3f},"
                  f"{r['refined_time_s'] * 1e3:.3f},"
+                 f"{r['refined_gain_pct']:.2f},"
                  f"{r['random_median_s'] * 1e3:.3f},"
                  f"{r['percentile']:.1f},{r['median_gain_pct']:.1f}")
     arch_beats = sum(1 for r in results
                      if r["workload"].startswith("arch:")
-                     and r["beats_median"])
+                     and "@" not in r["workload"] and r["beats_median"])
+    refine_wins = sum(1 for r in results
+                      if r["workload"].endswith("@x4")
+                      and r["refine_beats_greedy"])
     summary = {
         "arch_workloads_beating_median": arch_beats,
         "acceptance_ok": arch_beats >= 2,
         "min_percentile": min(r["percentile"] for r in results),
+        # ISSUE-5 acceptance: gated refinement strictly beats greedy
+        # (gated makespan) on >= 2 of the 3 traced archs (@x4 rows).
+        "arch_refine_strict_wins_x4": refine_wins,
+        "refine_acceptance_ok": refine_wins >= 2,
+        "max_refined_gain_pct": max(r["refined_gain_pct"]
+                                    for r in results),
     }
     print_fn(f"summary: {json.dumps(summary)}")
     return {"benchmark": "dag_scheduling", "n_random": n_random,
             "seed": seed, "refine_budget": refine_budget,
+            "refine_model": "gated",
             "results": results, "summary": summary}
 
 
@@ -155,8 +197,10 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default="BENCH_dag.json")
     ap.add_argument("--n-random", type=int, default=N_RANDOM)
     ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--refine-budget", type=int, default=200)
     args = ap.parse_args(argv)
-    out = run(n_random=args.n_random, seed=args.seed)
+    out = run(n_random=args.n_random, seed=args.seed,
+              refine_budget=args.refine_budget)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {args.out}")

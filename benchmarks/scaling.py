@@ -21,6 +21,14 @@ re-simulation via ``DeltaEvaluator``), reporting effective-move
 throughput (candidate moves evaluated per second) for both.  The
 acceptance bar is >= 5x delta throughput at n = 256.
 
+A **gated-DAG refinement** section (ISSUE 5) measures
+``refine_order_dag(model="gated")`` over the same chain-structured
+DAGs: the checkpointing gated delta path
+(``repro.graph.delta.GatedDeltaEvaluator``, path ``dag_refine_gated``
+— guarded by ``check_regression.py``) vs full gated re-simulation per
+candidate (``DagEventSimulator`` as ``time_fn``, path
+``dag_refine_gated_full``, skipped above ``--max-gated-full-n``).
+
 Emits ``BENCH_scheduler_scaling.json`` for the perf trajectory
 (consumed by ``benchmarks/check_regression.py``).  The reference
 construction path is O(R * n^2) Python-level ScoreGen reruns and is
@@ -44,7 +52,8 @@ from repro.core.refine import refine_order
 from repro.core.resources import (KernelProfile, bs_kernel, ep_kernel,
                                   es_kernel, sw_kernel)
 from repro.core.tpu import decode_profile, make_serving_device, prefill_profile
-from repro.graph import KernelGraph, greedy_order_dag
+from repro.graph import (DagEventSimulator, KernelGraph, greedy_order_dag,
+                         refine_order_dag)
 from repro.slice import SlicePolicy, greedy_order_slices
 
 REFINE_BUDGET = 200
@@ -56,6 +65,10 @@ NS = (8, 32, 128, 512, 1024)
 #: round-model default of 200.
 EVENT_BUDGET = 40
 EVENT_NS = (64, 128, 256, 512, 1024)
+#: gated-DAG refine (ISSUE 5): same budget discipline, smaller band —
+#: each gated full sim walks the whole dependency frontier, so the
+#: full-re-sim baseline is capped separately (--max-gated-full-n).
+GATED_NS = (64, 128, 256, 512)
 _FAMS = [ep_kernel, bs_kernel, es_kernel, sw_kernel]
 
 
@@ -190,6 +203,30 @@ def slice_construct(ks, edges, device) -> dict:
             "n_expanded": len(res.kernels)}
 
 
+def gated_refine(ks, edges, device, path: str) -> dict:
+    """Gated-model local search on the constrained greedy order:
+    checkpointing delta path (``dag_refine_gated`` — the guarded
+    cell) vs full gated re-simulation per candidate
+    (``dag_refine_gated_full``)."""
+    g = KernelGraph(ks, edges)
+    eids = g.edges_by_id()
+    order = greedy_order_dag(ks, device, edges=edges).order
+    t0 = time.perf_counter()
+    if path == "dag_refine_gated_full":
+        sim = DagEventSimulator(device, eids)
+        _, t_g, evals = refine_order_dag(
+            order, device, edge_ids=eids, time_fn=sim.simulate,
+            budget=EVENT_BUDGET, neighborhood="adjacent")
+    else:
+        _, t_g, evals = refine_order_dag(
+            order, device, edge_ids=eids, model="gated",
+            budget=EVENT_BUDGET, neighborhood="adjacent")
+    wall = time.perf_counter() - t0
+    return {"path": path, "wall_s": wall, "refine_evals": evals,
+            "moves_per_s": evals / max(wall, 1e-9),
+            "modelled_gated_time_s": t_g, "n_edges": len(edges)}
+
+
 def event_refine(ks, device, path: str) -> dict:
     """Event-model local search on the greedy order; returns wall time,
     evaluated moves and effective-move throughput."""
@@ -211,7 +248,8 @@ def event_refine(ks, device, path: str) -> dict:
 
 
 def run(max_ref_n: int = 512, seed: int = 0, max_event_full_n: int = 256,
-        repeats: int = 2, print_fn=print) -> dict:
+        max_gated_full_n: int = 128, repeats: int = 2,
+        print_fn=print) -> dict:
     results = []
     print_fn("# Scheduler scaling: reference vs vectorized "
              f"(refine budget {REFINE_BUDGET}, best of {repeats})")
@@ -281,13 +319,36 @@ def run(max_ref_n: int = 512, seed: int = 0, max_event_full_n: int = 256,
                      f"{rec['refine_evals']},{rec['moves_per_s']:.1f},"
                      f"{ratio if ratio == '' else f'{ratio:.1f}'}")
             results.append({"scenario": "gpu_mix", "n": n, **rec})
+    print_fn("# Gated-DAG refine: full re-sim vs checkpoint delta "
+             f"(budget {EVENT_BUDGET} full-sim equivalents, "
+             "chain-structured edges)")
+    print_fn("scenario,n,path,wall_s,evals,moves_per_s,throughput_ratio")
+    for n in GATED_NS:
+        rng = random.Random(seed)
+        ks = gpu_mix(rng, n)
+        edges = chain_edges(rng, n, width=max(4, n // 8))
+        delta = _best_of(repeats, lambda: gated_refine(
+            ks, edges, GTX580, "dag_refine_gated"))
+        full = None
+        if n <= max_gated_full_n:
+            full = _best_of(repeats, lambda: gated_refine(
+                ks, edges, GTX580, "dag_refine_gated_full"))
+        for rec in filter(None, (full, delta)):
+            ratio = (rec["moves_per_s"] / full["moves_per_s"]
+                     if full is not None and rec is delta else "")
+            print_fn(f"gpu_dag,{n},{rec['path']},{rec['wall_s']:.4f},"
+                     f"{rec['refine_evals']},{rec['moves_per_s']:.1f},"
+                     f"{ratio if ratio == '' else f'{ratio:.1f}'}")
+            results.append({"scenario": "gpu_dag", "n": n, **rec})
     summary = _summary(results)
     out = {"benchmark": "scheduler_scaling",
            "refine_budget": REFINE_BUDGET,
            "event_refine_budget": EVENT_BUDGET,
            "ns": list(NS), "event_ns": list(EVENT_NS),
+           "gated_ns": list(GATED_NS),
            "max_ref_n": max_ref_n,
            "max_event_full_n": max_event_full_n,
+           "max_gated_full_n": max_gated_full_n,
            "repeats": repeats,
            "results": results, "summary": summary}
     print_fn(f"summary: {json.dumps(summary)}")
@@ -317,11 +378,20 @@ def _summary(results: list[dict]) -> dict:
             event_tp[f"{scen}@n={n}"] = (d["moves_per_s"] /
                                          max(r["moves_per_s"], 1e-9))
     tp256 = [v for k, v in event_tp.items() if k.endswith("n=256")]
+    gated_tp = {}
+    for (scen, n, path), r in by.items():
+        if path != "dag_refine_gated_full":
+            continue
+        d = by.get((scen, n, "dag_refine_gated"))
+        if d is not None:
+            gated_tp[f"{scen}@n={n}"] = (d["moves_per_s"] /
+                                         max(r["moves_per_s"], 1e-9))
     return {"speedups": speedups,
             "min_speedup_at_512": min(s512.values()) if s512 else None,
             "quality_no_worse_than_reference": quality_ok,
             "event_move_throughput_ratios": event_tp,
-            "event_delta_throughput_at_256": tp256[0] if tp256 else None}
+            "event_delta_throughput_at_256": tp256[0] if tp256 else None,
+            "gated_move_throughput_ratios": gated_tp}
 
 
 def main(argv=None) -> int:
@@ -329,6 +399,7 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default="BENCH_scheduler_scaling.json")
     ap.add_argument("--max-ref-n", type=int, default=512)
     ap.add_argument("--max-event-full-n", type=int, default=256)
+    ap.add_argument("--max-gated-full-n", type=int, default=128)
     ap.add_argument("--full", action="store_true",
                     help="run the reference path at every n")
     ap.add_argument("--seed", type=int, default=0)
@@ -338,6 +409,7 @@ def main(argv=None) -> int:
     max_ref = max(NS) if args.full else args.max_ref_n
     out = run(max_ref_n=max_ref, seed=args.seed,
               max_event_full_n=args.max_event_full_n,
+              max_gated_full_n=args.max_gated_full_n,
               repeats=args.repeats)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)

@@ -11,23 +11,32 @@ workloads: prefill-heavy continuous-batching mixes on mixtral 8x7b and
 deepseek-v2 traced to per-layer chains, where every prefill stage is
 oversized (8192/6144 tokens against the 4096-slot round budget).
 
-Per workload and slice policy (occupancy-threshold and
-target-round-fill):
+Each workload x slice policy is evaluated on the single-core serving
+device AND on a 4-core serving slice
+(``make_serving_device(n_units=4)``, rows suffixed ``@x4``), where
+slices genuinely co-execute across cores and the slicing gain
+multiplies.
+
+Per workload, policy and device:
 
 * gated makespan (``DagEventSimulator``) of the unsliced constrained
   greedy (``greedy_order_dag``) — the PR 3 baseline,
 * gated makespan of the lazy sliced greedy
-  (``greedy_order_slices``) and of its precedence-respecting
-  refinement (``refine_order_slices``),
+  (``greedy_order_slices``) and of its precedence-respecting **gated**
+  refinement (``refine_order_slices(model="gated")`` — the local
+  search optimizes the gated DAG makespan directly via
+  ``repro.graph.delta.GatedDeltaEvaluator``, so the refined time is
+  the schedule's own scoring currency, no greedy fallback),
 * the sliced greedy's percentile rank among >= 200 random topological
   orders of the *sliced* graph (uniform-tie-break Kahn sampling) —
   the paper's Fig. 1 design-space protocol.
 
 The ISSUE-4 acceptance bar: sliced greedy strictly below the unsliced
 makespan on >= 2 workloads, at >= the 90th percentile of the sampled
-design space.  Slice factor 1 degeneracy (policy=None reproducing the
-unsliced pipeline bit-for-bit) is pinned separately in
-``tests/test_slice.py``.
+design space (single-core rows, as committed).  The ISSUE-5 bar:
+gated refinement strictly below the sliced greedy on the @x4 rows.
+Slice factor 1 degeneracy (policy=None reproducing the unsliced
+pipeline bit-for-bit) is pinned separately in ``tests/test_slice.py``.
 
 Emits ``BENCH_slicing.json``.  Run:
   PYTHONPATH=src python benchmarks/slicing.py
@@ -86,20 +95,21 @@ def _evaluate(name: str, arch: str, reqs, device, *, policy_name: str,
     assert sg.is_topological(sl.order)
     sim = DagEventSimulator(device, sl.edges_by_id())
     t_sl = sim.simulate(sl.order)
-    order, _, _ = refine_order_slices(sl, device, budget=refine_budget,
-                                      model="event",
-                                      neighborhood="adjacent")
+    # Gated refinement: the hill-climb's objective IS the gated
+    # makespan of the sliced DAG (slice/join edges in the legality
+    # filter, zero-work joins retired instantly), so t_ref is the true
+    # gated time of the refined order — never worse than the greedy.
+    order, t_ref, refine_evals = refine_order_slices(
+        sl, device, budget=refine_budget, model="gated",
+        neighborhood="adjacent")
     assert sg.is_topological(order)
-    # Refinement optimizes the ungated proxy; under the gated currency
-    # the sliced greedy stays the fallback (same convention as
-    # benchmarks/dag.py).
-    t_ref = min(sim.simulate(order), t_sl)
     rand = sorted(sim.simulate(o) for o in
                   sg.random_topological_orders(n_random, seed=seed))
     med = rand[len(rand) // 2]
     return {
         "workload": name,
         "arch": arch,
+        "device": device.name,
         "slice_policy": policy_name,
         "n_nodes_unsliced": g.n,
         "n_nodes_sliced": len(sl.kernels),
@@ -109,52 +119,72 @@ def _evaluate(name: str, arch: str, reqs, device, *, policy_name: str,
         "unsliced_greedy_time_s": t_un,
         "sliced_greedy_time_s": t_sl,
         "sliced_refined_time_s": t_ref,
+        "refine_evals": refine_evals,
         "slicing_gain_pct": (t_un / t_sl - 1.0) * 100.0,
+        "refined_gain_pct": (t_sl / t_ref - 1.0) * 100.0,
+        "refine_beats_greedy": t_ref < t_sl,
         "n_random_orders": n_random,
         "random_median_s": med,
         "random_best_s": rand[0],
         "percentile": percentile_rank(t_sl, rand),
+        "refined_percentile": percentile_rank(t_ref, rand),
         "beats_unsliced": t_sl < t_un,
     }
 
 
 def run(n_random: int = N_RANDOM, seed: int = 1,
-        refine_budget: int = 40, print_fn=print) -> dict:
-    device = make_serving_device()
+        refine_budget: int = 100, print_fn=print) -> dict:
+    devices = {"": make_serving_device(),
+               "@x4": make_serving_device(n_units=4)}
     results = []
     print_fn("# Kernel slicing on oversized-stage workloads "
-             f"({n_random} random topological orders, gated event model)")
+             f"({n_random} random topological orders, gated event model, "
+             "gated-delta refinement)")
     print_fn("workload,policy,nodes,sliced_nodes,unsliced_ms,sliced_ms,"
-             "refined_ms,gain_pct,percentile")
+             "refined_ms,gain_pct,refine_gain_pct,percentile")
     for name, (arch, reqs) in WORKLOADS.items():
         for pol_name, pol in POLICIES.items():
-            rec = _evaluate(name, arch, reqs, device,
-                            policy_name=pol_name, policy=pol,
-                            n_random=n_random, seed=seed,
-                            refine_budget=refine_budget)
-            results.append(rec)
-            print_fn(f"{rec['workload']},{rec['slice_policy']},"
-                     f"{rec['n_nodes_unsliced']},{rec['n_nodes_sliced']},"
-                     f"{rec['unsliced_greedy_time_s'] * 1e3:.1f},"
-                     f"{rec['sliced_greedy_time_s'] * 1e3:.1f},"
-                     f"{rec['sliced_refined_time_s'] * 1e3:.1f},"
-                     f"{rec['slicing_gain_pct']:.1f},"
-                     f"{rec['percentile']:.1f}")
-    # acceptance: per workload, the default (occupancy) policy must
-    # strictly beat unsliced at >= the 90th percentile
-    default_rows = [r for r in results if r["slice_policy"] == "occupancy"]
+            for suffix, device in devices.items():
+                rec = _evaluate(name + suffix, arch, reqs, device,
+                                policy_name=pol_name, policy=pol,
+                                n_random=n_random, seed=seed,
+                                refine_budget=refine_budget)
+                results.append(rec)
+                print_fn(
+                    f"{rec['workload']},{rec['slice_policy']},"
+                    f"{rec['n_nodes_unsliced']},{rec['n_nodes_sliced']},"
+                    f"{rec['unsliced_greedy_time_s'] * 1e3:.1f},"
+                    f"{rec['sliced_greedy_time_s'] * 1e3:.1f},"
+                    f"{rec['sliced_refined_time_s'] * 1e3:.1f},"
+                    f"{rec['slicing_gain_pct']:.1f},"
+                    f"{rec['refined_gain_pct']:.2f},"
+                    f"{rec['percentile']:.1f}")
+    # ISSUE-4 acceptance: per single-core workload, the default
+    # (occupancy) policy must strictly beat unsliced at >= p90
+    default_rows = [r for r in results
+                    if r["slice_policy"] == "occupancy"
+                    and "@" not in r["workload"]]
     wins = sum(1 for r in default_rows
                if r["beats_unsliced"] and r["percentile"] >= 90.0)
+    # ISSUE-5 acceptance: gated refinement strictly beats the sliced
+    # greedy on the multi-core (@x4) occupancy rows.
+    x4_rows = [r for r in results if r["slice_policy"] == "occupancy"
+               and r["workload"].endswith("@x4")]
+    refine_wins = sum(1 for r in x4_rows if r["refine_beats_greedy"])
     summary = {
         "workloads_with_strict_win_at_p90": wins,
         "acceptance_ok": wins >= 2,
         "min_gain_pct": min(r["slicing_gain_pct"] for r in default_rows),
         "max_gain_pct": max(r["slicing_gain_pct"] for r in results),
+        "refine_strict_wins_x4": refine_wins,
+        "refine_acceptance_ok": refine_wins >= 2,
+        "max_refined_gain_pct": max(r["refined_gain_pct"]
+                                    for r in results),
     }
     print_fn(f"summary: {json.dumps(summary)}")
     return {"benchmark": "slicing", "n_random": n_random, "seed": seed,
-            "refine_budget": refine_budget, "results": results,
-            "summary": summary}
+            "refine_budget": refine_budget, "refine_model": "gated",
+            "results": results, "summary": summary}
 
 
 def main(argv=None) -> int:
@@ -162,8 +192,10 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default="BENCH_slicing.json")
     ap.add_argument("--n-random", type=int, default=N_RANDOM)
     ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--refine-budget", type=int, default=100)
     args = ap.parse_args(argv)
-    out = run(n_random=args.n_random, seed=args.seed)
+    out = run(n_random=args.n_random, seed=args.seed,
+              refine_budget=args.refine_budget)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {args.out}")

@@ -63,6 +63,14 @@ simulators in this module (:class:`_FastRoundSim`,
 reference oracles with per-kernel profile data resolved to flat tuples
 once, which is what makes thousands of suffix re-simulations per
 refinement affordable.
+
+Both built-in models here are *flat* — every kernel free to
+co-schedule.  Dependency-carrying orders have their own currency (the
+ready-set gated dispatcher) and their own evaluator built on this
+module's discipline: :class:`repro.graph.delta.GatedDeltaEvaluator`
+subclasses :class:`DeltaEvaluator` with a gated fast simulator, and
+:func:`repro.graph.constrained.refine_order_dag` (``model="gated"``)
+is the precedence-respecting counterpart of :func:`refine_order`.
 """
 
 from __future__ import annotations
@@ -429,6 +437,11 @@ class DeltaEvaluator:
     block of that position is dispatched — so the checkpoint *at* the
     first changed position is itself usable, and every move resumes
     from the latest possible dispatcher state.
+
+    The gated DAG currency reuses the event discipline through the
+    subclass :class:`repro.graph.delta.GatedDeltaEvaluator` (its
+    simulator enforces the ready-set admission gate; checkpoints stay
+    plain :class:`EventCheckpoint`).
     """
 
     def __init__(self, device: DeviceModel, model: str = "round"):
@@ -438,8 +451,14 @@ class DeltaEvaluator:
             self.sim = _FastEventSim(device)
         else:
             raise ValueError(f"unknown model {model!r} "
-                             "(expected 'round' or 'event')")
+                             "(expected 'round' or 'event'; for the "
+                             "gated DAG model use "
+                             "repro.graph.delta.GatedDeltaEvaluator)")
         self.model = model
+        #: one checkpoint per order position (event-style models) vs
+        #: one per round boundary; subclasses with their own simulator
+        #: (repro.graph.delta.GatedDeltaEvaluator) set this directly.
+        self._per_position = model == "event"
         self._base: list[KernelProfile] = []
         self._ckpts: list = []
         self._total = 0.0
@@ -464,7 +483,7 @@ class DeltaEvaluator:
         at suffix cost, which keeps accepted moves as cheap as
         evaluating them.
         """
-        if self.model == "event":
+        if self._per_position:
             if first_changed < len(self._ckpts):
                 cp = self._ckpts[first_changed]
                 t, suffix = self.sim.simulate(order, start_state=cp,
@@ -502,7 +521,7 @@ class DeltaEvaluator:
                         first_changed: int) -> tuple[float, float]:
         """As :meth:`evaluate`, plus the evaluation's cost as a
         fraction of a full re-simulation (suffix length / n)."""
-        if self.model == "event":
+        if self._per_position:
             # One checkpoint per position, captured before any block
             # of that position was dispatched: the checkpoint at
             # first_changed depends only on earlier positions.
@@ -532,8 +551,8 @@ class DeltaEvaluator:
 
     def boundaries(self) -> list[int] | None:
         """Admission-boundary positions of the base order, or ``None``
-        when every position is one (event model)."""
-        if self.model == "event":
+        when every position is one (event-style models)."""
+        if self._per_position:
             return None
         return [cp.pos for cp in self._ckpts]
 

@@ -41,8 +41,12 @@ co-schedule with every other.  When precedence edges exist (per-layer
 chains of a traced model graph, producer/consumer kernels), use
 :mod:`repro.graph` instead: ``greedy_order_dag`` is the ready-set
 variant of the same algorithm (identical to the flat path on an empty
-edge set), ``refine_order_dag`` the legal local search, and
-``DagEventSimulator`` the gated makespan model.
+edge set), ``refine_order_dag`` the legal local search — with
+``model="gated"`` it optimizes the gated makespan model
+(``DagEventSimulator``, checkpointable since PR 5) directly via
+``repro.graph.delta.GatedDeltaEvaluator``.  When a workload carries
+stages too large to pack at all, go one layer further up to
+:mod:`repro.slice` (lazy Kernelet-style slicing over the same greedy).
 """
 
 from __future__ import annotations

@@ -35,6 +35,14 @@ checkpoint.  A candidate order that agrees with the recorded order on
 every position before the checkpoint replays the identical float
 accumulation from there on, which is what makes suffix re-simulation
 (:class:`repro.core.refine.DeltaEvaluator`) exact.
+
+Both models treat every kernel as free to co-schedule with every
+other.  Orders that carry precedence edges are scored by the gated
+extension of the event model —
+:class:`repro.graph.streams.DagEventSimulator`, which holds a kernel
+at the queue head until its predecessors drain, shares this module's
+:class:`EventCheckpoint` format (the gate state is derived on resume)
+and is delta-evaluated by :class:`repro.graph.delta.GatedDeltaEvaluator`.
 """
 
 from __future__ import annotations

@@ -162,12 +162,25 @@ def fifo_rounds(items: Sequence["TpuWorkItem"],
 
 def make_serving_device(*, hbm_round_budget: float = 8 << 30,
                         token_budget: int = 4096,
-                        vmem_budget: float = 96 << 20) -> DeviceModel:
-    """A v5e core viewed as one execution unit for round composition."""
+                        vmem_budget: float = 96 << 20,
+                        n_units: int = 1) -> DeviceModel:
+    """A v5e core viewed as one execution unit for round composition.
+
+    ``n_units > 1`` models a multi-core serving slice (a v5e-N pod
+    slice): every core carries its own budgets (``caps`` are per unit)
+    and its own roofline rates; the event dispatcher round-robins work
+    items across cores while dependent chains serialize through the
+    ready-set gate (:class:`repro.graph.streams.DagEventSimulator`).
+    This is the regime where the paper's placement effects exist at
+    all — per-core load imbalance and under-occupancy make the gated
+    makespan genuinely order-sensitive, which single-core round
+    composition (aligned rounds, one unit) is blind to.
+    """
     base = TPU_V5E_UNIT
     return DeviceModel(
-        name="tpu_v5e_round",
-        n_units=1,
+        name=("tpu_v5e_round" if n_units == 1
+              else f"tpu_v5e_round_x{n_units}"),
+        n_units=n_units,
         caps={"vmem": vmem_budget, "hbm": hbm_round_budget,
               "slots": float(token_budget)},
         max_resident=token_budget,

@@ -9,9 +9,14 @@ serving configs.  Flat-order callers keep using
 * :mod:`repro.graph.kernel_graph` — :class:`KernelGraph` +
   :func:`trace_arch` (config -> per-layer work-item chains),
 * :mod:`repro.graph.constrained` — :func:`greedy_order_dag` (ready-set
-  incremental greedy) + :func:`refine_order_dag` (legal local search),
+  incremental greedy) + :func:`refine_order_dag` (legal local search;
+  ``model="gated"`` optimizes the gated DAG makespan directly),
 * :mod:`repro.graph.streams` — :func:`assign_streams` (k launch
-  queues) + :class:`DagEventSimulator` (gated makespan model).
+  queues) + :class:`DagEventSimulator` (gated makespan model,
+  checkpointable),
+* :mod:`repro.graph.delta` — :class:`GatedDeltaEvaluator` +
+  ``_FastGatedSim`` (suffix re-simulation under the gated model; the
+  delta path that makes ``model="gated"`` refinement affordable).
 
 When a workload carries *oversized* stages — profiles that saturate a
 device capacity on their own (long prefill chunks against the slot
@@ -23,6 +28,7 @@ co-schedulable slices (Kernelet-style) and degenerates to
 """
 
 from .constrained import greedy_order_dag, refine_order_dag
+from .delta import GatedDeltaEvaluator
 from .kernel_graph import (KernelGraph, TracedWorkload,
                            arch_kv_bytes_per_token, estimate_n_params,
                            trace_arch)
@@ -32,7 +38,7 @@ from .streams import (DagEventSimulator, StreamAssignment, assign_streams,
 __all__ = [
     "KernelGraph", "TracedWorkload", "trace_arch",
     "arch_kv_bytes_per_token", "estimate_n_params",
-    "greedy_order_dag", "refine_order_dag",
+    "greedy_order_dag", "refine_order_dag", "GatedDeltaEvaluator",
     "DagEventSimulator", "StreamAssignment", "assign_streams",
     "fifo_rounds_dag",
 ]

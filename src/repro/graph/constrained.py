@@ -19,12 +19,16 @@ is always the whole alive set and the function reproduces
 :func:`refine_order_dag` is the precedence-respecting counterpart of
 :func:`repro.core.refine.refine_order`: the same swap/reinsertion move
 sets, but moves that would invert an edge are rejected *before* any
-simulation, and legal candidates are delta-evaluated through the
-unchanged :class:`~repro.core.refine.DeltaEvaluator` (the evaluator's
-round/event models ignore precedence — they are the repo's standard
-makespan currency for a launch order; legality is enforced purely on
-the move filter, and the gated makespan of the final order is available
-from :class:`repro.graph.streams.DagEventSimulator`).
+simulation, and legal candidates are delta-evaluated.  Three objective
+currencies are supported: ``model="round"``/``"event"`` run the flat
+:class:`~repro.core.refine.DeltaEvaluator` (those models ignore
+precedence — useful as cheap proxies when the gate barely binds), and
+``model="gated"`` runs the
+:class:`repro.graph.delta.GatedDeltaEvaluator`, optimizing the DAG
+makespan of :class:`repro.graph.streams.DagEventSimulator` *directly*
+via gated suffix re-simulation — the currency DAG and slice schedules
+are actually scored in (``benchmarks/dag.py``,
+``benchmarks/slicing.py``, the serving gated guard).
 """
 
 from __future__ import annotations
@@ -40,6 +44,8 @@ from repro.core.refine import DeltaEvaluator, _apply, _moves
 from repro.core.resources import DeviceModel, KernelProfile
 from repro.core.scheduler import Round, Schedule
 from repro.core.simulator import simulate
+
+from .delta import GatedDeltaEvaluator
 
 __all__ = ["greedy_order_dag", "refine_order_dag"]
 
@@ -198,6 +204,15 @@ def refine_order_dag(
     kernel before one of its predecessors is discarded before it costs
     any simulation.  The returned order is therefore always a valid
     topological order, and never modelled-worse than the input.
+
+    ``model`` selects the objective currency: ``"round"``/``"event"``
+    are the flat (precedence-blind) simulators, ``"gated"`` the
+    dependency-aware :class:`~repro.graph.streams.DagEventSimulator`
+    makespan, delta-evaluated via
+    :class:`~repro.graph.delta.GatedDeltaEvaluator` — use it when the
+    returned time must be the DAG schedule's own scoring currency
+    (best_t then *is* the gated makespan of ``best_order``, so no
+    greedy fallback is needed on the gated scoreboard).
     """
     n = len(order)
     base = list(order)
@@ -208,9 +223,16 @@ def refine_order_dag(
     legal = _legal_mask(base, edge_ids)
     if not legal(base):
         raise ValueError("input order violates the precedence edges")
-    use_delta = time_fn is None and model in ("round", "event")
-    delta = DeltaEvaluator(device, model=model) if use_delta else None
-    if time_fn is None:
+    use_delta = time_fn is None and model in ("round", "event", "gated")
+    if not use_delta:
+        delta = None
+    elif model == "gated":
+        delta = GatedDeltaEvaluator(device, edge_ids)
+    else:
+        delta = DeltaEvaluator(device, model=model)
+    if time_fn is None and not use_delta:
+        # Only reachable with an unknown model string: simulate() then
+        # raises on first evaluation.  Valid models always delta-eval.
         time_fn = lambda o: simulate(o, device, model=model)  # noqa: E731
     best = base
     best_t = delta.rebase(best) if use_delta else time_fn(best)

@@ -21,7 +21,18 @@ module generalizes the flat round order to that setting:
   units.  With an empty edge set the gate never fires and the
   simulation is float-for-float identical to ``EventSimulator``
   (property-tested in ``tests/test_graph.py``), so DAG schedules get
-  the same modelled-makespan currency as flat ones;
+  the same modelled-makespan currency as flat ones.  Like the
+  reference, it is *checkpointable*: ``record=True`` captures one
+  :class:`~repro.core.simulator.EventCheckpoint` per order position
+  and ``start_state=`` resumes from one, replaying the identical
+  float accumulation.  The gate's own state (per-kernel retired-block
+  counts) is **derived** from the checkpoint rather than stored in
+  it: at the instant position ``p`` is first examined, every earlier
+  position has been fully dispatched, so a kernel's retired count is
+  its grid size minus the blocks still resident in the checkpoint's
+  cohorts — which is what lets gated suffix re-simulation
+  (:class:`repro.graph.delta.GatedDeltaEvaluator`) share the flat
+  checkpoint format;
 * :func:`fifo_rounds_dag` is the dependency-aware arrival-order
   baseline: capacity packing that also closes a round whenever the
   next item depends on a member of the open round (the round model's
@@ -37,7 +48,7 @@ from typing import Iterable, Sequence
 
 from repro.core.resources import DeviceModel, KernelProfile
 from repro.core.scheduler import Schedule
-from repro.core.simulator import _EPS, _Cohort, _Unit
+from repro.core.simulator import _EPS, EventCheckpoint, _Cohort, _Unit
 
 __all__ = ["StreamAssignment", "assign_streams", "DagEventSimulator",
            "fifo_rounds_dag"]
@@ -169,19 +180,64 @@ class DagEventSimulator:
     join never inflates the gated makespan.  No kernel outside the
     slice subsystem is zero-work, so ungated runs (the 0-edge
     float-identity pin vs ``EventSimulator``) are unaffected.
+
+    This is the oracle implementation of the gated model; the
+    optimized twin with flat-tuple state is
+    :class:`repro.graph.delta._FastGatedSim`, property-tested against
+    this class for exact float equality
+    (``tests/test_gated_delta.py``), full runs and checkpoint resumes
+    alike.
     """
 
     device: DeviceModel
     edge_ids: set = field(default_factory=set)
 
-    def simulate(self, order: Sequence[KernelProfile]) -> float:
+    def simulate(self, order: Sequence[KernelProfile], *,
+                 start_state: EventCheckpoint | None = None,
+                 record: bool = False):
+        """Gated execution time of ``order``.
+
+        ``start_state`` resumes from a previously recorded
+        :class:`~repro.core.simulator.EventCheckpoint`; ``order`` must
+        agree with the checkpoint's source order at every position
+        before ``start_state.pos``.  With ``record=True`` returns
+        ``(time, checkpoints)`` — one checkpoint per order position,
+        captured the first time the dispatcher examines it (before the
+        ready gate consults predecessor state, which itself depends
+        only on earlier positions); otherwise returns the time alone.
+        """
         dev = self.device
         dims = tuple(dev.caps)
         preds: dict[int, list[int]] = {}
         for u, v in self.edge_ids:
             preds.setdefault(v, []).append(u)
-        retired: dict[int, int] = {id(k): 0 for k in order}
         grid: dict[int, int] = {id(k): k.n_blocks for k in order}
+        if start_state is None:
+            units = [_Unit(used={d: 0.0 for d in dims})
+                     for _ in range(dev.n_units)]
+            start_pos, rr, t = 0, 0, 0.0
+            retired: dict[int, int] = {id(k): 0 for k in order}
+        else:
+            units = []
+            for used, n_res, cohorts in start_state.units:
+                u = _Unit(used=dict(zip(dims, used)), n_resident=n_res,
+                          cohorts=[_Cohort(k, nb, fl, ta)
+                                   for k, nb, fl, ta in cohorts])
+                u.recompute_rate(dev)
+                units.append(u)
+            start_pos, rr, t = (start_state.pos, start_state.rr,
+                                start_state.time)
+            # Derived gate state: every position < start_pos was fully
+            # dispatched before the checkpoint was captured, so its
+            # retired count is its grid size minus the blocks still
+            # resident in the checkpoint's cohorts (zero-work joins
+            # never enter a cohort, so they derive fully retired).
+            retired = {id(k): 0 for k in order}
+            for p in range(start_pos):
+                retired[id(order[p])] = grid[id(order[p])]
+            for _, _, cohorts in start_state.units:
+                for k, nb, _, _ in cohorts:
+                    retired[id(k)] -= nb
 
         def ready(k: KernelProfile) -> bool:
             return all(retired.get(p, 0) >= grid.get(p, 0)
@@ -191,10 +247,11 @@ class DagEventSimulator:
             return (k.inst_per_block == 0.0 and
                     all(k.demands.get(d, 0.0) == 0.0 for d in dev.caps))
 
-        units = [_Unit(used={d: 0.0 for d in dims})
-                 for _ in range(dev.n_units)]
-        rr, t = 0, 0.0
-        pending: deque[list] = deque([k, k.n_blocks] for k in order)
+        pending: deque[list] = deque(
+            [order[p], order[p].n_blocks, p]
+            for p in range(start_pos, len(order)))
+        ckpts: list[EventCheckpoint] = []
+        next_ckpt = start_pos
 
         def fits(u: _Unit, k: KernelProfile) -> bool:
             if u.n_resident + 1 > dev.max_resident:
@@ -203,10 +260,18 @@ class DagEventSimulator:
                        for dim in dev.caps)
 
         def try_admit() -> None:
-            nonlocal rr
+            nonlocal rr, next_ckpt
             touched: set[int] = set()
             while pending:
-                k, _ = pending[0]
+                k, _, pos = pending[0]
+                if record and pos == next_ckpt:
+                    # First examination of position ``pos``: no block
+                    # of it placed yet, and the ready gate's verdict
+                    # depends only on earlier positions — capture
+                    # before consulting it.
+                    ckpts.append(EventCheckpoint.capture(
+                        pos, pending[0][1], t, rr, units, dims))
+                    next_ckpt = pos + 1
                 if not ready(k):
                     break  # admission gate: predecessors still in flight
                 if zero_work(k):
@@ -248,7 +313,7 @@ class DagEventSimulator:
             if guard > 1_000_000:
                 raise RuntimeError("DagEventSimulator failed to converge")
             if not any(u.cohorts for u in units):
-                k, nb = pending[0]
+                k, nb, _ = pending[0]
                 if not ready(k):
                     # Units are drained, so every dispatched block has
                     # retired; an unready head means a predecessor was
@@ -292,4 +357,6 @@ class DagEventSimulator:
                     u.recompute_rate(dev)
             if freed:
                 try_admit()
+        if record:
+            return t, ckpts
         return t

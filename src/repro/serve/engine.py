@@ -35,6 +35,7 @@ from repro.core.tpu import (TpuWorkItem, decode_profile, fifo_rounds,
                             make_serving_device, prefill_profile,
                             round_time)
 from repro.graph.constrained import greedy_order_dag, refine_order_dag
+from repro.graph.delta import _FastGatedSim
 from repro.graph.kernel_graph import trace_arch
 from repro.graph.streams import fifo_rounds_dag
 from repro.slice import KernelSlicer, greedy_order_slices, join_item
@@ -94,8 +95,27 @@ class SchedulerPolicy:
     #: corresponding core simulator, delta-evaluated via the
     #: checkpointing :class:`repro.core.refine.DeltaEvaluator` — the
     #: suffix re-simulation path that makes event-model refinement
-    #: affordable on the serving hot path.
+    #: affordable on the serving hot path.  On the respect_deps path
+    #: "gated" refines under the gated DAG makespan itself
+    #: (:class:`repro.graph.delta.GatedDeltaEvaluator`) — the currency
+    #: that actually scores dependency-aware schedules.
     refine_model: str = "rounds"
+    #: Guard currency for the respect_deps/slice_policy path: "rounds"
+    #: compares compositions against dep-aware arrival order under the
+    #: TPU round cost model (each round charged its distinct stages'
+    #: weight streams).  That currency structurally punishes slice
+    #: rounds — every round touching a slice pays the full stage
+    #: stream, so slicing wins that the gated dispatcher realizes
+    #: (slices co-executing with decode work) are guarded away.
+    #: "gated" compares gated-event makespans of the compositions'
+    #: flat launch orders (:class:`repro.graph.DagEventSimulator` over
+    #: the expanded slice/join edges) — the same currency
+    #: ``benchmarks/slicing.py`` scores, letting serving accept
+    #: compositions whose slice rounds genuinely co-execute.  The
+    #: stale-replay drift re-validation stays in the round currency
+    #: either way (it compares a replay against its own stored time,
+    #: not against fifo).
+    dag_guard: str = "rounds"
     #: ScheduleCache: reuse round compositions across steps whose
     #: work-item mix is equivalent (decode kv-lens bucketized).
     cache: bool = True
@@ -382,11 +402,13 @@ class ServingEngine:
         is the slice-aware one
         (:func:`repro.slice.greedy_order_slices`): stages it cannot
         pack are cut into co-schedulable slices, with the chain tail's
-        exact execution moved to the slice join.  The usual cost-model
-        guard compares against the dependency-aware arrival-order
-        packing (:func:`repro.graph.fifo_rounds_dag`) — plain
-        ``fifo_rounds`` could co-schedule a stage with its own
-        predecessor.
+        exact execution moved to the slice join.  The cost-model guard
+        compares against the dependency-aware arrival-order packing
+        (:func:`repro.graph.fifo_rounds_dag`) — plain ``fifo_rounds``
+        could co-schedule a stage with its own predecessor — in the
+        currency ``policy.dag_guard`` selects: the round cost model,
+        or the gated-event makespan (which is what lets slice rounds
+        win, see :meth:`_dag_gated_time`).
 
         The ScheduleCache participates with coarsened per-request
         *chain* signatures (kind, kv bucket, stage count) so that
@@ -401,6 +423,15 @@ class ServingEngine:
 
         def modelled(rounds):
             return sum(self._dag_round_time(rd) for rd in rounds)
+
+        def guard_time(rounds):
+            # Guard currency (policy.dag_guard): the round cost model,
+            # or the gated-event makespan of the composition's flat
+            # launch order — the latter sees slice rounds co-execute
+            # instead of billing each one the full stage stream.
+            if self.policy.dag_guard == "gated":
+                return self._dag_gated_time(rounds, traced)
+            return modelled(rounds)
 
         fifo = [[by_name[p.name] for p in rd]
                 for rd in fifo_rounds_dag(profs, self.device, eids,
@@ -423,7 +454,7 @@ class ServingEngine:
                     # composition, so the "never modelled-worse than
                     # dep-aware arrival order" invariant survives
                     # cache hits.
-                    if modelled(fifo) < modelled(replay):
+                    if guard_time(fifo) < guard_time(replay):
                         return fifo
                     return replay
         sp = self.policy.slice_policy
@@ -460,7 +491,8 @@ class ServingEngine:
             sl_eids = sl.edges_by_id()
         if self.policy.kind == "refined":
             model = (self.policy.refine_model
-                     if self.policy.refine_model in ("round", "event")
+                     if self.policy.refine_model in ("round", "event",
+                                                     "gated")
                      else "round")
             order, _, _ = refine_order_dag(
                 sched.order, self.device, edge_ids=sl_eids, model=model,
@@ -472,11 +504,58 @@ class ServingEngine:
             prof_rounds = [rd.kernels for rd in sched.rounds]
         composed = [[names[p.name] for p in rd] for rd in prof_rounds]
         # Same guard as the flat path: never accept a composition the
-        # round cost model says is worse than (dep-aware) arrival order.
-        result = fifo if modelled(fifo) < modelled(composed) else composed
+        # guard currency says is worse than (dep-aware) arrival order.
+        result = fifo if guard_time(fifo) < guard_time(composed) \
+            else composed
         if key is not None:
             self._dag_store(key, result, labels)
         return result
+
+    def _dag_gated_time(self, rounds, traced) -> float:
+        """Gated-event makespan of a composition's flat launch order
+        (``policy.dag_guard == "gated"``).
+
+        Rebuilds the dependency structure from item names so replayed
+        compositions — whose slices were re-cut from cached patterns —
+        are scored too: parent edges come from the traced graph, a
+        sliced parent's in-edges fan out to its slices, its out-edges
+        hang off the ``#join`` marker, and slices close the diamond on
+        the join.  A flat order that is not topological (a corrupted
+        replay) scores ``inf`` and is rejected by the guard."""
+        profs, names = [], {}
+        for rd in rounds:
+            for trip in rd:
+                p = trip[0].profile()
+                profs.append(p)
+                names[p.name] = p
+        slices: dict[str, list] = {}
+        for p in profs:
+            parent, sep, sub = p.name.partition("#")
+            if sep and sub.startswith("s"):
+                slices.setdefault(parent, []).append(p)
+        ks = traced.graph.kernels
+        pairs: set[tuple[int, int]] = set()
+        for u, v in traced.graph.edges:
+            a, b = ks[u].name, ks[v].name
+            srcs = ([names.get(a + "#join")] if a in slices
+                    else [names.get(a)])
+            dsts = slices[b] if b in slices else [names.get(b)]
+            for s in srcs:
+                for d in dsts:
+                    if s is not None and d is not None:
+                        pairs.add((id(s), id(d)))
+        for parent, parts in slices.items():
+            j = names.get(parent + "#join")
+            if j is not None:
+                for s in parts:
+                    pairs.add((id(s), id(j)))
+        try:
+            # The flat-tuple twin of DagEventSimulator (bit-identical,
+            # tests/test_gated_delta.py) — the guard runs twice per
+            # compose step, so oracle speed matters here.
+            return _FastGatedSim(self.device, pairs).simulate(profs)[0]
+        except ValueError:
+            return float("inf")
 
     # -- DAG-path ScheduleCache (coarsened chain signatures) -----------
     def _dag_key_and_labels(self, triples, traced):

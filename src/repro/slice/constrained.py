@@ -23,6 +23,12 @@ pinned by ``tests/test_slice.py``.
 order: legality extends to the slice/join edges automatically (a slice
 can never move before its parent's predecessors, a successor never
 before the join) because the move filter reads the expanded edge set.
+With ``model="gated"`` it optimizes the sliced schedule's own scoring
+currency — the gated DAG makespan
+(:class:`repro.graph.streams.DagEventSimulator`, which retires the
+zero-work joins instantly) — directly via gated suffix re-simulation
+(:class:`repro.graph.delta.GatedDeltaEvaluator`), so the returned time
+needs no greedy fallback on the gated scoreboard.
 """
 
 from __future__ import annotations
@@ -147,7 +153,10 @@ def refine_order_slices(
     flat order.  Slice/join edges participate in the legality filter
     like any other precedence edge, so every candidate keeps slices
     after their parent's predecessors and the join (hence all
-    successors) after every slice."""
+    successors) after every slice.  ``model="gated"`` optimizes the
+    gated DAG makespan directly (delta-evaluated suffix re-simulation,
+    see :func:`repro.graph.constrained.refine_order_dag`); ``"round"``
+    and ``"event"`` remain the cheap precedence-blind proxies."""
     return refine_order_dag(result.order, device,
                             edge_ids=result.edges_by_id(),
                             budget=budget, model=model,

@@ -1,0 +1,98 @@
+"""Docs-freshness check (ISSUE 5 satellite): every ``repro.*`` dotted
+name mentioned in ``docs/*.md`` (and the README) must resolve against
+the live package — import the longest importable module prefix, then
+getattr-walk the remainder — and every mentioned repo-relative file
+path must exist.  Renaming a module, function or benchmark without
+updating the docs fails here instead of silently rotting them.
+"""
+
+import importlib
+import os
+import re
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_DOCS = [os.path.join(_ROOT, "README.md")] + sorted(
+    os.path.join(_ROOT, "docs", f)
+    for f in (os.listdir(os.path.join(_ROOT, "docs"))
+              if os.path.isdir(os.path.join(_ROOT, "docs")) else [])
+    if f.endswith(".md"))
+
+#: dotted repro names, e.g. ``repro.graph.delta.GatedDeltaEvaluator``
+_DOTTED = re.compile(r"\brepro(?:\.[A-Za-z_]\w*)+")
+#: repo-relative paths, e.g. ``benchmarks/dag.py``, ``docs/benchmarks.md``
+_PATHS = re.compile(
+    r"\b(?:benchmarks|tests|examples|docs|src)/[\w./-]+\.(?:py|md)\b")
+#: committed benchmark artifacts, e.g. ``BENCH_dag.json``
+_BENCH = re.compile(r"\bBENCH_\w+\.json\b")
+
+
+def _docs():
+    assert _DOCS, "docs suite missing"
+    for path in _DOCS:
+        with open(path, encoding="utf-8") as f:
+            yield path, f.read()
+
+
+def _resolve(dotted: str) -> None:
+    """Import the longest importable module prefix of ``dotted``, then
+    attribute-walk the rest.  Raises on any failure."""
+    parts = dotted.split(".")
+    last_err = None
+    for k in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:k]))
+        except ImportError as e:
+            last_err = e
+            continue
+        for attr in parts[k:]:
+            obj = getattr(obj, attr)  # raises AttributeError if stale
+        return
+    raise last_err or ImportError(dotted)
+
+
+def test_docs_exist():
+    names = {os.path.basename(p) for p in _DOCS}
+    assert "README.md" in names
+    for required in ("architecture.md", "paper_mapping.md",
+                     "benchmarks.md"):
+        assert required in names, f"docs/{required} missing"
+
+
+def test_every_dotted_repro_name_resolves():
+    failures = []
+    for path, text in _docs():
+        for dotted in sorted(set(_DOTTED.findall(text))):
+            try:
+                _resolve(dotted)
+            except (ImportError, AttributeError) as e:
+                failures.append(f"{os.path.basename(path)}: {dotted} "
+                                f"({type(e).__name__}: {e})")
+    assert not failures, "stale names in docs:\n" + "\n".join(failures)
+
+
+def test_every_mentioned_path_exists():
+    failures = []
+    for path, text in _docs():
+        for rel in sorted(set(_PATHS.findall(text))):
+            if not os.path.exists(os.path.join(_ROOT, rel)):
+                failures.append(f"{os.path.basename(path)}: {rel}")
+        for rel in sorted(set(_BENCH.findall(text))):
+            if not os.path.exists(os.path.join(_ROOT, rel)):
+                failures.append(f"{os.path.basename(path)}: {rel}")
+    assert not failures, "stale paths in docs:\n" + "\n".join(failures)
+
+
+def test_architecture_names_cover_scheduling_packages():
+    """architecture.md must keep naming every scheduling-layer module
+    — the map is the doc's reason to exist."""
+    text = dict(_docs())[os.path.join(_ROOT, "docs", "architecture.md")]
+    for mod in ("repro.core.scheduler", "repro.core.fastscore",
+                "repro.core.simulator", "repro.core.refine",
+                "repro.core.tpu", "repro.graph.kernel_graph",
+                "repro.graph.constrained", "repro.graph.streams",
+                "repro.graph.delta", "repro.slice.slicer",
+                "repro.slice.graph", "repro.slice.constrained",
+                "repro.serve.engine"):
+        assert mod in text, f"architecture.md no longer names {mod}"

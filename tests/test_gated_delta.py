@@ -1,0 +1,400 @@
+"""Property tests for the checkpointable gated simulator and the
+gated delta evaluator (ISSUE 5): exact float equality between gated
+suffix re-simulation and full gated re-simulation, checkpoint
+interchangeability between ``DagEventSimulator`` and
+``_FastGatedSim``, slice/join graphs (zero-work markers), the 0-edge
+degeneration to the ungated ``EventSimulator`` identity, and the
+``refine_order_dag(model="gated")`` / ``refine_order_slices``
+integration.
+
+Written with plain ``random`` (no hypothesis dependency in the pinned
+toolchain) over seeded draws, so failures reproduce exactly.
+"""
+
+import random
+
+import pytest
+
+from repro.core import GTX580, EventSimulator, KernelProfile
+from repro.core.refine import DeltaEvaluator, _FastEventSim
+from repro.core.resources import bs_kernel, ep_kernel, es_kernel, sw_kernel
+from repro.core.tpu import (decode_profile, make_serving_device,
+                            prefill_profile)
+from repro.graph import (DagEventSimulator, GatedDeltaEvaluator,
+                         KernelGraph, greedy_order_dag, refine_order_dag)
+from repro.graph.delta import _FastGatedSim
+from repro.slice import SlicePolicy, greedy_order_slices, refine_order_slices
+
+_FAMS = [ep_kernel, bs_kernel, es_kernel, sw_kernel]
+_TPU = make_serving_device()
+_TPU4 = make_serving_device(n_units=4)
+
+
+def _gpu_kernels(rng: random.Random, n: int) -> list[KernelProfile]:
+    return [rng.choice(_FAMS)(f"k{i}",
+                              grid=rng.choice([8, 16, 32, 48, 64, 96]),
+                              shm=rng.choice([0, 4096, 8192, 16384, 24576]),
+                              inst=rng.uniform(1e6, 5e8))
+            for i in range(n)]
+
+
+def _tpu_profiles(rng: random.Random, n: int) -> list[KernelProfile]:
+    items = []
+    for i in range(n):
+        if rng.random() < 0.4:
+            items.append(prefill_profile(
+                f"p{i}", n_params=7e9,
+                seq_len=rng.choice([128, 256, 512, 1024]),
+                kv_bytes_per_token=131072))
+        else:
+            items.append(decode_profile(
+                f"d{i}", n_params=7e9, kv_len=rng.randint(1, 8192),
+                kv_bytes_per_token=131072))
+    return [it.profile() for it in items]
+
+
+def _random_dag_edges(rng: random.Random, n: int,
+                      density: float = 1.0) -> set:
+    """Random forward edges (u < v): acyclic by construction."""
+    edges = set()
+    for _ in range(int(density * n)):
+        u, v = rng.randrange(n), rng.randrange(n)
+        if u != v:
+            edges.add((min(u, v), max(u, v)))
+    return edges
+
+
+def _sliced_workload(rng: random.Random, device):
+    """A chain DAG with oversized prefill stages, expanded by the lazy
+    slice greedy — the slice/join graph shape (zero-work join markers)
+    the gated evaluator must handle."""
+    n = rng.randint(8, 16)
+    items = []
+    for i in range(n):
+        u = rng.random()
+        if u < 0.3:
+            it = prefill_profile(f"P{i}", n_params=7e9,
+                                 seq_len=rng.choice([6144, 8192]),
+                                 kv_bytes_per_token=131072)
+        else:
+            it = decode_profile(f"d{i}", n_params=7e9,
+                                kv_len=rng.randint(64, 8192),
+                                kv_bytes_per_token=131072)
+        items.append(it.profile())
+    edges = set()
+    chains: list[list[int]] = [[] for _ in range(4)]
+    for i in range(n):
+        c = chains[rng.randrange(4)]
+        if c:
+            edges.add((c[-1], i))
+        c.append(i)
+    return greedy_order_slices(items, device, edges=edges,
+                               policy=SlicePolicy())
+
+
+# --------------------------------------------------------------------------
+# fast gated sim == reference gated sim (full runs, random DAGs)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("device,maker", [(GTX580, _gpu_kernels),
+                                          (_TPU, _tpu_profiles),
+                                          (_TPU4, _tpu_profiles)])
+def test_fast_gated_sim_matches_reference(device, maker):
+    rng = random.Random(13)
+    for _ in range(12):
+        n = rng.randint(2, 18)
+        ks = maker(rng, n)
+        g = KernelGraph(ks, _random_dag_edges(rng, n,
+                                              rng.uniform(0.0, 2.0)))
+        order = g.random_topological_order(rng)
+        eids = g.edges_by_id()
+        t_ref = DagEventSimulator(device, eids).simulate(order)
+        t_fast = _FastGatedSim(device, eids).simulate(order)[0]
+        assert t_fast == t_ref
+
+
+def test_zero_edge_gated_degenerates_to_event_sim():
+    """With no edges the gated pipeline replays the ungated event
+    model's float accumulation exactly — reference and fast alike."""
+    rng = random.Random(7)
+    for _ in range(10):
+        ks = _gpu_kernels(rng, rng.randint(2, 16))
+        t_event = EventSimulator(GTX580).simulate(ks)
+        assert DagEventSimulator(GTX580, set()).simulate(ks) == t_event
+        assert _FastGatedSim(GTX580, set()).simulate(ks)[0] == t_event
+        assert _FastEventSim(GTX580).simulate(ks)[0] == t_event
+
+
+# --------------------------------------------------------------------------
+# checkpoint resume == full simulation, both implementations, both ways
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("device,maker", [(GTX580, _gpu_kernels),
+                                          (_TPU4, _tpu_profiles)])
+def test_gated_checkpoint_resume_equals_full(device, maker):
+    rng = random.Random(11)
+    for _ in range(8):
+        n = rng.randint(2, 14)
+        ks = maker(rng, n)
+        g = KernelGraph(ks, _random_dag_edges(rng, n, 1.0))
+        order = g.random_topological_order(rng)
+        eids = g.edges_by_id()
+        ref = DagEventSimulator(device, eids)
+        fast = _FastGatedSim(device, eids)
+        t_full = ref.simulate(order)
+        t_rec, ref_ck = ref.simulate(order, record=True)
+        t_fast, fast_ck = fast.simulate(order, record=True)
+        assert t_rec == t_full == t_fast
+        assert [c.pos for c in ref_ck] == list(range(n))
+        assert [c.pos for c in fast_ck] == list(range(n))
+        for p in {0, n // 2, n - 1}:
+            # resume from own checkpoints
+            assert ref.simulate(order, start_state=ref_ck[p]) == t_full
+            assert fast.simulate(order,
+                                 start_state=fast_ck[p])[0] == t_full
+            # checkpoints are interchangeable between implementations
+            assert ref.simulate(order, start_state=fast_ck[p]) == t_full
+            assert fast.simulate(order,
+                                 start_state=ref_ck[p])[0] == t_full
+
+
+def test_gated_checkpoints_interchange_with_ungated_on_zero_edges():
+    """On an empty edge set the gated simulators produce checkpoints
+    the ungated fast event sim can consume and vice versa — the
+    'layered on EventCheckpoint' design, pinned."""
+    rng = random.Random(3)
+    ks = _gpu_kernels(rng, 10)
+    t_full = EventSimulator(GTX580).simulate(ks)
+    _, ev_ck = _FastEventSim(GTX580).simulate(ks, record=True)
+    _, gt_ck = _FastGatedSim(GTX580, set()).simulate(ks, record=True)
+    for p in (0, 5, 9):
+        assert _FastGatedSim(GTX580, set()).simulate(
+            ks, start_state=ev_ck[p])[0] == t_full
+        assert _FastEventSim(GTX580).simulate(
+            ks, start_state=gt_ck[p])[0] == t_full
+
+
+# --------------------------------------------------------------------------
+# delta evaluation == full gated re-simulation (exact)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("device,maker", [(GTX580, _gpu_kernels),
+                                          (_TPU, _tpu_profiles),
+                                          (_TPU4, _tpu_profiles)])
+def test_gated_delta_equals_full_resimulation(device, maker):
+    rng = random.Random(5)
+    for _ in range(8):
+        n = rng.randint(3, 16)
+        ks = maker(rng, n)
+        g = KernelGraph(ks, _random_dag_edges(rng, n, 1.0))
+        order = g.random_topological_order(rng)
+        eids = g.edges_by_id()
+        ev = GatedDeltaEvaluator(device, eids)
+        ev.rebase(order)
+        ref = DagEventSimulator(device, eids)
+        checked = 0
+        for _ in range(40):
+            i, j = rng.randrange(n), rng.randrange(n)
+            if i == j:
+                continue
+            cand = list(order)
+            cand[i], cand[j] = cand[j], cand[i]
+            if not ev.legal(cand):
+                continue
+            assert ev.evaluate(cand, min(i, j)) == ref.simulate(cand)
+            checked += 1
+        # move-style candidates too (remove + reinsert)
+        for _ in range(20):
+            i, j = rng.randrange(n), rng.randrange(n)
+            if i == j:
+                continue
+            cand = list(order)
+            cand.insert(j, cand.pop(i))
+            if not ev.legal(cand):
+                continue
+            assert ev.evaluate(cand, min(i, j)) == ref.simulate(cand)
+            checked += 1
+
+
+def test_gated_delta_slice_join_graphs_exact():
+    """Sliced workloads (slice diamonds + zero-work joins): delta
+    evaluation and checkpoint resume stay bit-exact through instant
+    join retirement."""
+    rng = random.Random(17)
+    for _ in range(4):
+        sl = _sliced_workload(rng, _TPU)
+        assert sl.sliced, "workload must actually trigger slicing"
+        eids = sl.edges_by_id()
+        order = sl.order
+        n = len(order)
+        ref = DagEventSimulator(_TPU, eids)
+        fast = _FastGatedSim(_TPU, eids)
+        t_full = ref.simulate(order)
+        t_fast, fck = fast.simulate(order, record=True)
+        assert t_fast == t_full
+        for p in (0, n // 3, n // 2, n - 1):
+            assert fast.simulate(order, start_state=fck[p])[0] == t_full
+            assert ref.simulate(order, start_state=fck[p]) == t_full
+        ev = GatedDeltaEvaluator(_TPU, eids)
+        ev.rebase(order)
+        for _ in range(25):
+            i, j = rng.randrange(n), rng.randrange(n)
+            if i == j:
+                continue
+            cand = list(order)
+            cand[i], cand[j] = cand[j], cand[i]
+            if not ev.legal(cand):
+                continue
+            assert ev.evaluate(cand, min(i, j)) == ref.simulate(cand)
+
+
+def test_gated_delta_rebase_incremental_matches_full_rebase():
+    """Accepted-move rebase (checkpoint-prefix stitching) leaves the
+    evaluator bit-identical to a cold rebase on the new order."""
+    rng = random.Random(23)
+    for _ in range(6):
+        n = rng.randint(4, 14)
+        ks = _gpu_kernels(rng, n)
+        g = KernelGraph(ks, _random_dag_edges(rng, n, 1.0))
+        order = g.random_topological_order(rng)
+        eids = g.edges_by_id()
+        ev = GatedDeltaEvaluator(GTX580, eids)
+        ev.rebase(order)
+        for _ in range(10):
+            i = rng.randrange(n - 1)
+            cand = list(order)
+            cand[i], cand[i + 1] = cand[i + 1], cand[i]
+            if not ev.legal(cand):
+                continue
+            t_inc = ev.rebase_incremental(cand, i)
+            cold = GatedDeltaEvaluator(GTX580, eids)
+            t_cold = cold.rebase(cand)
+            assert t_inc == t_cold
+            assert len(ev._ckpts) == len(cold._ckpts)
+            order = cand
+
+
+def test_gated_delta_costs_suffix_fraction():
+    rng = random.Random(2)
+    n = 12
+    ks = _gpu_kernels(rng, n)
+    g = KernelGraph(ks, {(i, i + 4) for i in range(n - 4)})
+    order = g.random_topological_order(rng)
+    eids = g.edges_by_id()
+    ev = GatedDeltaEvaluator(GTX580, eids)
+    ev.rebase(order)
+    cand = list(order)
+    cand[n - 2], cand[n - 1] = cand[n - 1], cand[n - 2]
+    if ev.legal(cand):
+        t, frac = ev.evaluate_costed(cand, n - 2)
+        assert t == DagEventSimulator(GTX580, eids).simulate(cand)
+        assert frac == pytest.approx(2 / n)
+    # gated model: every position is an admission boundary
+    assert ev.boundaries() is None
+
+
+def test_gated_delta_legality_filter_and_deadlock_guard():
+    ks = _gpu_kernels(random.Random(1), 4)
+    eids = {(id(ks[0]), id(ks[1]))}
+    ev = GatedDeltaEvaluator(GTX580, eids)
+    assert ev.legal(ks)
+    bad = [ks[1], ks[0], ks[2], ks[3]]
+    assert not ev.legal(bad)
+    # the simulator itself is the backstop: a non-topological order
+    # deadlocks the gate and raises instead of returning a bogus time
+    with pytest.raises(ValueError):
+        _FastGatedSim(GTX580, eids).simulate(bad)
+
+
+# --------------------------------------------------------------------------
+# refine_order_dag(model="gated") / refine_order_slices integration
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("device,maker", [(GTX580, _gpu_kernels),
+                                          (_TPU4, _tpu_profiles)])
+def test_refine_gated_never_worse_exact_topological(device, maker):
+    rng = random.Random(9)
+    for _ in range(6):
+        n = rng.randint(4, 14)
+        ks = maker(rng, n)
+        edges = _random_dag_edges(rng, n, 1.0)
+        g = KernelGraph(ks, edges)
+        sched = greedy_order_dag(ks, device, edges=edges)
+        eids = g.edges_by_id()
+        t0 = DagEventSimulator(device, eids).simulate(sched.order)
+        order, t, _ = refine_order_dag(sched.order, device,
+                                       edge_ids=eids, budget=40,
+                                       model="gated",
+                                       neighborhood="adjacent")
+        assert g.is_topological(order)
+        assert t <= t0 + 1e-15
+        # the returned time is the true gated makespan, exactly
+        assert t == DagEventSimulator(device, eids).simulate(order)
+
+
+def test_refine_gated_full_moveset_matches_full_evaluation_trajectory():
+    """With the full move set the gated delta path retraces the
+    full-evaluation (time_fn=DagEventSimulator) trajectory exactly."""
+    rng = random.Random(19)
+    for _ in range(4):
+        n = rng.randint(3, 8)
+        ks = _gpu_kernels(rng, n)
+        edges = _random_dag_edges(rng, n, 0.8)
+        g = KernelGraph(ks, edges)
+        order = g.random_topological_order(rng)
+        eids = g.edges_by_id()
+        sim = DagEventSimulator(GTX580, eids)
+        o_ref, t_ref, _ = refine_order_dag(
+            order, GTX580, edge_ids=eids, time_fn=sim.simulate,
+            budget=2000, neighborhood="full")
+        o_fast, t_fast, _ = refine_order_dag(
+            order, GTX580, edge_ids=eids, model="gated", budget=2000,
+            neighborhood="full")
+        assert t_fast == t_ref
+        assert [k.name for k in o_fast] == [k.name for k in o_ref]
+
+
+def test_refine_order_slices_gated_never_worse_and_exact():
+    rng = random.Random(29)
+    sl = _sliced_workload(rng, _TPU4)
+    sim = DagEventSimulator(_TPU4, sl.edges_by_id())
+    t_sl = sim.simulate(sl.order)
+    order, t, _ = refine_order_slices(sl, _TPU4, budget=40,
+                                      model="gated",
+                                      neighborhood="adjacent")
+    assert sl.graph().is_topological(order)
+    assert t <= t_sl + 1e-15
+    assert t == sim.simulate(order)
+
+
+# --------------------------------------------------------------------------
+# slow sweep (ISSUE-5 CI satellite)
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_gated_refine_n512_sweep():
+    """n=512 chain-structured DAG: gated refinement completes within a
+    small budget, emits a topological order no worse than the greedy,
+    and its delta-evaluated makespan equals full gated re-simulation
+    at this scale."""
+    rng = random.Random(41)
+    ks = _gpu_kernels(rng, 512)
+    edges = set()
+    chains: list[list[int]] = [[] for _ in range(64)]
+    for i in range(512):
+        c = chains[rng.randrange(64)]
+        if c:
+            edges.add((c[-1], i))
+        c.append(i)
+    g = KernelGraph(ks, edges)
+    sched = greedy_order_dag(ks, GTX580, edges=edges)
+    eids = g.edges_by_id()
+    t0 = DagEventSimulator(GTX580, eids).simulate(sched.order)
+    order, t, evals = refine_order_dag(sched.order, GTX580,
+                                       edge_ids=eids, budget=10,
+                                       model="gated",
+                                       neighborhood="adjacent")
+    assert g.is_topological(order)
+    assert t <= t0 + 1e-15
+    assert t == DagEventSimulator(GTX580, eids).simulate(order)
+    assert evals >= 10

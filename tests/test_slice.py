@@ -450,6 +450,121 @@ def test_serving_tokens_bit_identical_with_slice_policy():
     assert all(len(v) >= 4 for v in s_sliced["outputs"].values())
 
 
+def test_serving_gated_guard_token_identity():
+    """The gated-event guard (``dag_guard="gated"``) only changes
+    which *composition* wins the fifo comparison — generated tokens
+    stay bit-identical to the round-guard engine, with slicing on
+    (shrunken slot budget so cutting genuinely triggers) and off."""
+    from repro.serve import SchedulerPolicy
+    dev = make_serving_device(token_budget=6)
+    base = _smoke_engine(SchedulerPolicy(kind="symbiotic",
+                                         respect_deps=True,
+                                         slice_policy=SlicePolicy()), dev)
+    base.submit(_smoke_requests())
+    s_base = base.run()
+    gated = _smoke_engine(
+        SchedulerPolicy(kind="symbiotic", respect_deps=True,
+                        slice_policy=SlicePolicy(), dag_guard="gated"),
+        dev)
+    gated.submit(_smoke_requests())
+    s_gated = gated.run()
+    assert s_gated["outputs"] == s_base["outputs"]
+    # unsliced path too
+    plain = _smoke_engine(SchedulerPolicy(kind="symbiotic",
+                                          respect_deps=True,
+                                          dag_guard="gated"), dev)
+    plain.submit(_smoke_requests())
+    assert plain.run()["outputs"] == s_base["outputs"]
+
+
+def test_serving_gated_guard_scores_sliced_composition():
+    """``_dag_gated_time`` rebuilds the expanded slice/join dependency
+    structure from item names: finite on a composition whose first
+    stage was cut into slices + join, and ``inf`` (guard rejection)
+    when the flat order breaks the slice diamond (join launched before
+    its slices)."""
+    from repro.serve import SchedulerPolicy
+    from repro.slice import KernelSlicer, join_item
+    dev = make_serving_device(token_budget=6)
+    eng = _smoke_engine(
+        SchedulerPolicy(kind="symbiotic", respect_deps=True,
+                        slice_policy=SlicePolicy(), dag_guard="gated",
+                        cache=False), dev)
+    eng.submit(_smoke_requests())
+    triples, traced = eng._work_items_dag()
+    # hand-cut the first request's head stage into a slice diamond,
+    # exactly as _compose_dag's make_slices closure would
+    it0, r0, kind0 = triples[0]
+    parts = KernelSlicer(SlicePolicy(mode="fixed", trigger_frac=0.0,
+                                     fixed_k=2), dev).slice_item(it0, 2)
+    assert len(parts) == 2
+    ji = join_item(it0)
+    rounds = ([[(parts[0], r0, "frag"), (parts[1], r0, "frag")],
+               [(ji, r0, kind0)]] +
+              [[trip] for trip in triples[1:]])
+    t = eng._dag_gated_time(rounds, traced)
+    assert 0.0 < t < float("inf")
+    # join before its slices: non-topological flat order scores inf
+    bad = ([[(ji, r0, kind0)],
+            [(parts[0], r0, "frag"), (parts[1], r0, "frag")]] +
+           [[trip] for trip in triples[1:]])
+    assert eng._dag_gated_time(bad, traced) == float("inf")
+
+
+def test_gated_guard_unlocks_slicing_win_round_guard_hides():
+    """The ROADMAP slicing follow-up, resolved: on a prefill+decode
+    mix whose prefill stages are oversized, the round-model guard
+    structurally rejects the sliced composition (every slice round
+    pays the stage weight stream) and serves dep-aware fifo, while
+    the gated guard accepts it — and the accepted composition's gated
+    makespan is strictly better than the round guard's choice."""
+    import numpy as np
+    from repro.serve import Request, SchedulerPolicy
+    dev = make_serving_device(token_budget=6)
+
+    def submit(eng):
+        rng = np.random.default_rng(0)
+        eng.submit([Request(i, rng.integers(0, 512, size=12),
+                            max_new_tokens=4) for i in range(2)] +
+                   [Request(10 + i, rng.integers(0, 512, size=2),
+                            max_new_tokens=6) for i in range(6)])
+
+    results = {}
+    for guard in ("rounds", "gated"):
+        eng = _smoke_engine(
+            SchedulerPolicy(kind="symbiotic", respect_deps=True,
+                            slice_policy=SlicePolicy(), dag_guard=guard,
+                            cache=False), dev)
+        submit(eng)
+        triples, traced = eng._work_items_dag()
+        rounds = eng._compose_dag(triples, traced)
+        names = [t[0].name for rd in rounds for t in rd]
+        results[guard] = (sum(1 for nm in names if "#s" in nm),
+                          eng._dag_gated_time(rounds, traced))
+    assert results["rounds"][0] == 0, "round guard serves unsliced fifo"
+    assert results["gated"][0] > 0, "gated guard accepts the slices"
+    assert results["gated"][1] < results["rounds"][1]
+
+
+def test_serving_refine_model_gated_runs():
+    """kind="refined" with refine_model="gated" threads the gated
+    delta evaluator through _compose_dag; tokens match the symbiotic
+    engine (refinement only reorders modelled rounds)."""
+    from repro.serve import SchedulerPolicy
+    dev = make_serving_device()
+    base = _smoke_engine(SchedulerPolicy(kind="symbiotic",
+                                         respect_deps=True), dev)
+    base.submit(_smoke_requests())
+    s_base = base.run()
+    ref = _smoke_engine(
+        SchedulerPolicy(kind="refined", respect_deps=True,
+                        refine_model="gated", refine_budget=20,
+                        dag_guard="gated"), dev)
+    ref.submit(_smoke_requests())
+    s_ref = ref.run()
+    assert s_ref["outputs"] == s_base["outputs"]
+
+
 def test_serving_dag_cache_warms_up():
     """PR 3 bypassed the cache on the respect_deps path; the
     coarsened per-request chain keying must now produce hits in
