@@ -17,6 +17,9 @@ from .fastscore import (ProfileTable, greedy_order_fast, pair_score_matrix,
                         score_matrix_fast, warm_start_insert)
 from .refine import (DeltaEvaluator, DeltaRoundEvaluator, refine_order,
                      refined_schedule)
+from .batched import (BatchedEventSim, BatchedRoundSim, PackedKernels,
+                      audit_pair_scores, pair_score_matrix_batched,
+                      refine_order_batched)
 from .tpu import (TpuWorkItem, compose_rounds, decode_profile,
                   make_serving_device, prefill_profile)
 
@@ -34,6 +37,9 @@ __all__ = [
     "score_matrix_fast", "warm_start_insert",
     "DeltaEvaluator", "DeltaRoundEvaluator", "refine_order",
     "refined_schedule",
+    "BatchedEventSim", "BatchedRoundSim", "PackedKernels",
+    "audit_pair_scores", "pair_score_matrix_batched",
+    "refine_order_batched",
     "TpuWorkItem", "compose_rounds", "decode_profile",
     "make_serving_device", "prefill_profile",
 ]

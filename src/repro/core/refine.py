@@ -612,6 +612,8 @@ def refine_order(
     budget: int = 2000,
     model: str = "event",
     neighborhood: str = "full",
+    batch_size: int | None = None,
+    table=None,
 ) -> tuple[list[KernelProfile], float, int]:
     """Hill-climb ``order`` under ``time_fn``.
 
@@ -619,6 +621,14 @@ def refine_order(
     (suffix re-simulation from cached admission checkpoints) under
     both built-in models — ``model="round"`` and ``model="event"``;
     any custom ``time_fn`` falls back to full evaluation per candidate.
+
+    ``batch_size`` routes to the batched evaluator
+    (:func:`repro.core.batched.refine_order_batched`): the move
+    neighborhood is scored in vectorized ``(B, n)`` passes and the
+    improving moves re-verified exactly, same budget accounting.
+    Requires the default ``time_fn``.  ``table`` threads an
+    already-built :class:`~repro.core.fastscore.ProfileTable` through
+    so a greedy + refine pipeline packs the kernel set exactly once.
 
     ``budget`` is charged in *full-simulation equivalents*: a delta
     evaluation that re-simulates only the last k of n positions costs
@@ -640,6 +650,14 @@ def refine_order(
     Returns ``(best_order, best_time, evaluations_used)``.
     """
     n = len(order)
+    if batch_size is not None and time_fn is None \
+            and model in ("round", "event"):
+        from repro.core.batched import refine_order_batched
+
+        return refine_order_batched(
+            order, device, model=model, budget=budget,
+            neighborhood=neighborhood, batch_size=batch_size,
+            table=table)
     if neighborhood == "auto":
         # Full neighbourhood while it still dominates the reference
         # within a serving budget; past that, local (adjacent) moves
@@ -707,10 +725,20 @@ def refined_schedule(
     budget: int = 2000,
     model: str = "event",
     neighborhood: str = "full",
+    batch_size: int | None = None,
 ) -> tuple[list[KernelProfile], float]:
     """Algorithm 1 (incremental fast path — identical schedules to the
-    reference) followed by local search.  Returns (order, time)."""
-    sched: Schedule = greedy_order_fast(kernels, device)
+    reference) followed by local search.  Returns (order, time).
+
+    The :class:`~repro.core.fastscore.ProfileTable` built for the
+    greedy is threaded into the refiner, so the pipeline packs the
+    kernel set exactly once (the batched path reuses its cached device
+    arrays too)."""
+    from .fastscore import ProfileTable
+
+    table = ProfileTable.build(kernels, device)
+    sched: Schedule = greedy_order_fast(kernels, device, table=table)
     order, t, _ = refine_order(sched.order, device, budget=budget,
-                               model=model, neighborhood=neighborhood)
+                               model=model, neighborhood=neighborhood,
+                               batch_size=batch_size, table=table)
     return order, t

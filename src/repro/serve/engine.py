@@ -141,6 +141,17 @@ class SchedulerPolicy:
     #: pays the full cold greedy the warm start exists to skip, so
     #: only measurement runs (``benchmarks/serving.py``) opt in.
     warm_audit_frac: float = 0.0
+    #: Move-evaluation backend for the refinement passes: "host" is
+    #: the sequential delta evaluator; "batched" scores the move
+    #: neighborhood in vectorized ``(B, n)`` passes
+    #: (:func:`repro.core.batched.refine_order_batched`) with exact
+    #: re-verification before any acceptance — same budget accounting,
+    #: same result currency, ~3x+ effective-move throughput at
+    #: serving-scale n (see ``BENCH_scheduler_scaling.json``).
+    refine_backend: str = "host"
+    #: Candidate batch per vectorized pass when
+    #: ``refine_backend="batched"``.
+    refine_batch: int = 128
 
 
 #: Work-item signature: what makes two items schedule-equivalent.
@@ -497,7 +508,10 @@ class ServingEngine:
             order, _, _ = refine_order_dag(
                 sched.order, self.device, edge_ids=sl_eids, model=model,
                 budget=self.policy.refine_budget,
-                neighborhood=self.policy.neighborhood)
+                neighborhood=self.policy.neighborhood,
+                batch_size=(self.policy.refine_batch
+                            if self.policy.refine_backend == "batched"
+                            else None))
             prof_rounds = fifo_rounds_dag(order, self.device, sl_eids,
                                           demands_of=dem)
         else:
@@ -752,7 +766,10 @@ class ServingEngine:
                     sched.order, self.device,
                     model=self.policy.refine_model,
                     budget=self.policy.refine_budget,
-                    neighborhood=self.policy.neighborhood)
+                    neighborhood=self.policy.neighborhood,
+                    batch_size=(self.policy.refine_batch
+                                if self.policy.refine_backend == "batched"
+                                else None))
             else:
                 # local search over the flat order, re-rounded by
                 # greedy capacity packing under the round cost model

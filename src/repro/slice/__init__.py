@@ -27,15 +27,18 @@ to the unsliced :mod:`repro.graph` pipeline.  Serving opts in through
 ``SchedulerPolicy.slice_policy`` (default off).
 """
 
+from .coalesce import coalesce_rounds
 from .constrained import (SlicedSchedule, greedy_order_slices,
                           refine_order_slices)
 from .graph import SliceExpansion, expand_nodes
 from .slicer import (KernelSlicer, SlicePolicy, is_join, is_slice,
-                     join_item, join_profile, parent_name)
+                     join_item, join_profile, merge_slice_profiles,
+                     parent_name, slice_indices)
 
 __all__ = [
     "SlicePolicy", "KernelSlicer", "join_profile", "join_item",
-    "parent_name", "is_slice", "is_join",
+    "parent_name", "is_slice", "is_join", "merge_slice_profiles",
+    "slice_indices", "coalesce_rounds",
     "SliceExpansion", "expand_nodes",
     "SlicedSchedule", "greedy_order_slices", "refine_order_slices",
 ]

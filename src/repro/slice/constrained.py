@@ -148,6 +148,8 @@ def refine_order_slices(
     budget: int = 2000,
     model: str = "event",
     neighborhood: str = "adjacent",
+    batch_size: int | None = None,
+    rescore: bool | None = None,
 ) -> tuple[list[KernelProfile], float, int]:
     """Precedence-respecting local search over a sliced schedule's
     flat order.  Slice/join edges participate in the legality filter
@@ -156,8 +158,12 @@ def refine_order_slices(
     successors) after every slice.  ``model="gated"`` optimizes the
     gated DAG makespan directly (delta-evaluated suffix re-simulation,
     see :func:`repro.graph.constrained.refine_order_dag`); ``"round"``
-    and ``"event"`` remain the cheap precedence-blind proxies."""
+    and ``"event"`` remain the cheap precedence-blind proxies.
+    ``batch_size`` selects the batched move evaluator
+    (:func:`repro.core.batched.refine_order_batched`) as in
+    :func:`~repro.graph.constrained.refine_order_dag`."""
     return refine_order_dag(result.order, device,
                             edge_ids=result.edges_by_id(),
                             budget=budget, model=model,
-                            neighborhood=neighborhood)
+                            neighborhood=neighborhood,
+                            batch_size=batch_size, rescore=rescore)

@@ -51,7 +51,8 @@ from repro.core.resources import DeviceModel, KernelProfile
 from repro.core.tpu import TpuWorkItem
 
 __all__ = ["SlicePolicy", "KernelSlicer", "join_profile", "join_item",
-           "parent_name", "is_slice", "is_join"]
+           "parent_name", "is_slice", "is_join", "merge_slice_profiles",
+           "slice_indices"]
 
 
 def parent_name(name: str) -> str:
@@ -236,6 +237,84 @@ class KernelSlicer:
                 weight_bytes=item.weight_bytes,
             ))
         return out
+
+
+def slice_indices(name: str) -> tuple[list[int], int]:
+    """Parse slice metadata: ``r0:moe#s1of4 -> ([1], 4)``;
+    merged slices carry every constituent index:
+    ``r0:moe#s1+3of4 -> ([1, 3], 4)``."""
+    if "#s" not in name:
+        raise ValueError(f"{name!r} is not a slice name")
+    meta = name.rsplit("#s", 1)[1]
+    idx_part, k_part = meta.rsplit("of", 1)
+    return sorted(int(p) for p in idx_part.split("+")), int(k_part)
+
+
+def merge_slice_profiles(slices: Sequence[KernelProfile],
+                         block_parallel: bool | None = None
+                         ) -> KernelProfile:
+    """Inverse of :meth:`KernelSlicer.slice_profile` for sibling
+    slices: one profile whose resource totals are the exact sum of the
+    inputs' (the same conservation law slicing obeys, run backwards).
+
+    Block-parallel siblings merge by summing grid blocks (per-block
+    demands, work and intensity unchanged); mass-sliced siblings
+    (single-block serving profiles) merge by summing demands and
+    per-block work, preserving intensity.  ``block_parallel=None``
+    infers the mode: any multi-block slice, or identical per-block
+    demand/work vectors across all siblings, means grid slicing (mass
+    shares are balanced integers, so equal mass shares — the one
+    ambiguous corner — merge block-shaped; totals are conserved under
+    either reading).
+
+    Merging *every* sibling (indices cover ``0..k-1``) restores the
+    parent name; a partial merge keeps slice metadata, e.g.
+    ``moe#s1of4 + moe#s3of4 -> moe#s1+3of4``, so
+    :func:`is_slice` / :func:`parent_name` keep working and a later
+    pass can finish the merge.
+    """
+    if not slices:
+        raise ValueError("need >= 1 slice to merge")
+    if len(slices) == 1:
+        return slices[0]
+    parent = parent_name(slices[0].name)
+    idxs: list[int] = []
+    k_tot = None
+    for s in slices:
+        if parent_name(s.name) != parent:
+            raise ValueError(f"not siblings: {s.name!r} vs {parent!r}")
+        ix, k = slice_indices(s.name)
+        if k_tot is None:
+            k_tot = k
+        elif k != k_tot:
+            raise ValueError(f"slice counts disagree on {s.name!r}")
+        idxs.extend(ix)
+    if len(set(idxs)) != len(idxs):
+        raise ValueError("duplicate slice indices")
+    idxs.sort()
+    full = idxs == list(range(k_tot))
+    name = (parent if full else
+            f"{parent}#s{'+'.join(str(i) for i in idxs)}of{k_tot}")
+    first = slices[0]
+    if block_parallel is None:
+        same = all(
+            s.demands == first.demands and
+            s.inst_per_block == first.inst_per_block and
+            s.r == first.r for s in slices[1:])
+        block_parallel = any(s.n_blocks > 1 for s in slices) or same
+    if block_parallel:
+        return replace(first, name=name,
+                       n_blocks=sum(int(s.n_blocks) for s in slices))
+    dims = {d for s in slices for d in s.demands}
+    return KernelProfile(
+        name=name,
+        n_blocks=first.n_blocks,
+        demands={d: sum(s.demands.get(d, 0.0) for s in slices)
+                 for d in dims},
+        inst_per_block=sum(s.inst_per_block for s in slices),
+        r=first.r,
+        agg_blocks_per_unit=first.agg_blocks_per_unit,
+    )
 
 
 def join_profile(parent: KernelProfile) -> KernelProfile:

@@ -30,9 +30,11 @@ from repro.core.resources import bs_kernel, ep_kernel, es_kernel, sw_kernel
 from repro.core.tpu import (decode_profile, make_serving_device,
                             prefill_profile)
 from repro.graph import DagEventSimulator, KernelGraph, greedy_order_dag
-from repro.slice import (KernelSlicer, SlicePolicy, expand_nodes,
-                         greedy_order_slices, is_join, is_slice, join_item,
-                         join_profile, parent_name, refine_order_slices)
+from repro.slice import (KernelSlicer, SlicePolicy, coalesce_rounds,
+                         expand_nodes, greedy_order_slices, is_join,
+                         is_slice, join_item, join_profile,
+                         merge_slice_profiles, parent_name,
+                         refine_order_slices, slice_indices)
 
 _TPU = make_serving_device()
 _FAMS = [ep_kernel, bs_kernel, es_kernel, sw_kernel]
@@ -653,3 +655,133 @@ def test_sliced_dag_n512_sweep():
     t_un = DagEventSimulator(_TPU, eids).simulate(un.order)
     t_sl = DagEventSimulator(_TPU, res.edges_by_id()).simulate(res.order)
     assert t_sl <= t_un * (1 + 1e-9)
+
+
+# --------------------------------------------------------------------------
+# coalescing: same-round siblings merge back (inverse conservation law)
+# --------------------------------------------------------------------------
+
+def _work_mass(ks):
+    """Total instructions and per-dimension demand mass over a node
+    set (zero-work joins contribute nothing by construction)."""
+    inst = sum(k.inst_per_block * k.n_blocks for k in ks)
+    dims = {d for k in ks for d in k.demands}
+    dem = {d: sum(k.demands.get(d, 0.0) * k.n_blocks for k in ks)
+           for d in dims}
+    return inst, dem
+
+
+def test_merge_slice_profiles_full_merge_restores_parent():
+    rng = random.Random(61)
+    for prof in _gpu_kernels(rng, 6):
+        sl = KernelSlicer(SlicePolicy(mode="fixed", fixed_k=3), GTX580)
+        parts = sl.slice_profile(prof, 3)
+        merged = merge_slice_profiles(parts)
+        assert merged.name == prof.name
+        assert not is_slice(merged.name)
+        i0, d0 = _work_mass([prof])
+        i1, d1 = _work_mass([merged])
+        assert i1 == pytest.approx(i0, rel=1e-12)
+        for d in d0:
+            assert d1[d] == pytest.approx(d0[d], rel=1e-12)
+
+
+def test_merge_slice_profiles_partial_naming_roundtrip():
+    rng = random.Random(62)
+    prof = _gpu_kernels(rng, 1)[0]
+    sl = KernelSlicer(SlicePolicy(mode="fixed", fixed_k=4), GTX580)
+    parts = sl.slice_profile(prof, 4)
+    merged = merge_slice_profiles([parts[1], parts[3]])
+    assert is_slice(merged.name)
+    assert parent_name(merged.name) == prof.name
+    ix, k = slice_indices(merged.name)
+    assert (ix, k) == ([1, 3], 4)
+    # a later pass can finish the merge: partial + remaining == parent
+    done = merge_slice_profiles([merged, parts[0], parts[2]])
+    assert done.name == prof.name
+    assert done.n_blocks == prof.n_blocks
+
+
+def test_merge_slice_profiles_mass_slices_conserve_totals():
+    it = prefill_profile("r0:p:L0", n_params=7e9, seq_len=8192,
+                         kv_bytes_per_token=131072)
+    prof = it.profile()
+    sl = KernelSlicer(SlicePolicy(mode="fixed", fixed_k=2), _TPU)
+    parts = sl.slice_profile(prof, 2)
+    merged = merge_slice_profiles(parts)
+    i0, d0 = _work_mass([prof])
+    i1, d1 = _work_mass([merged])
+    assert i1 == pytest.approx(i0, rel=1e-12)
+    for d in d0:
+        assert d1[d] == pytest.approx(d0[d], rel=1e-12)
+
+
+def test_merge_slice_profiles_rejects_bad_groups():
+    rng = random.Random(63)
+    a, b = _gpu_kernels(rng, 2)
+    sl = KernelSlicer(SlicePolicy(mode="fixed", fixed_k=2), GTX580)
+    pa, pb = sl.slice_profile(a, 2), sl.slice_profile(b, 2)
+    with pytest.raises(ValueError):
+        merge_slice_profiles([pa[0], pb[1]])       # different parents
+    with pytest.raises(ValueError):
+        merge_slice_profiles([pa[0], pa[0]])       # duplicate index
+    with pytest.raises(ValueError):
+        merge_slice_profiles([])
+
+
+def test_coalesce_rounds_conserves_and_keeps_makespan():
+    """On a workload the round_fill policy over-slices, coalescing
+    merges same-round siblings back: fewer nodes, identical work and
+    demand mass, a still-topological order, and a bit-identical gated
+    makespan (merged siblings ran side by side already)."""
+    rng = random.Random(64)
+    merged_any = False
+    for trial in range(6):
+        items = _tpu_items(rng, rng.randint(8, 16), oversized_frac=0.9)
+        profs = [it.profile() for it in items]
+        res = greedy_order_slices(
+            profs, _TPU,
+            policy=SlicePolicy(mode="round_fill", target_fill=0.2))
+        out = coalesce_rounds(res)
+        i0, d0 = _work_mass(res.kernels)
+        i1, d1 = _work_mass(out.kernels)
+        assert i1 == pytest.approx(i0, rel=1e-12)
+        for d in d0:
+            assert d1[d] == pytest.approx(d0.get(d, 0.0), rel=1e-12)
+        g = out.graph()
+        g.validate()
+        assert g.is_topological(out.order)
+        t0 = DagEventSimulator(_TPU, res.edges_by_id()).simulate(
+            res.order)
+        t1 = DagEventSimulator(_TPU, out.edges_by_id()).simulate(
+            out.order)
+        assert t1 == pytest.approx(t0, rel=1e-9)
+        if len(out.kernels) < len(res.kernels):
+            merged_any = True
+            # every merge shrinks the graph; fully collapsed stages
+            # must leave no orphan joins behind
+            names = {k.name for k in out.kernels}
+            for k in out.kernels:
+                if is_join(k.name):
+                    p = parent_name(k.name)
+                    assert any(is_slice(nm) and not is_join(nm) and
+                               parent_name(nm) == p for nm in names)
+    assert merged_any
+
+
+def test_coalesce_rounds_noop_when_siblings_spread():
+    """When the composed schedule keeps siblings in distinct rounds
+    (the common, useful case) coalescing is the identity."""
+    rng = random.Random(65)
+    items = _tpu_items(rng, 10, oversized_frac=0.35)
+    profs = [it.profile() for it in items]
+    res = greedy_order_slices(profs, _TPU, policy=SlicePolicy())
+    out = coalesce_rounds(res)
+    sibs_shared = any(
+        len({parent_name(k.name) for k in rd.kernels
+             if is_slice(k.name) and not is_join(k.name)}) <
+        sum(1 for k in rd.kernels
+            if is_slice(k.name) and not is_join(k.name))
+        for rd in res.rounds)
+    if not sibs_shared:
+        assert out is res
