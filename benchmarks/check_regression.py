@@ -15,6 +15,16 @@ way (their wall time is the event-model refinement hot path).  Both
 sides use best-of-``--repeats`` wall times (the committed JSON records
 its own ``repeats``), the standard protocol for wall-clock guards.
 
+Two absolute floors ride along (both load-insensitive ratios of two
+fresh runs on the same box, so they need no committed baseline): the
+batched-vs-sequential refine throughput ratio (``--batched-floor``)
+and, since PR 7, the incremental-vs-batch compose-time speedup under
+serving churn (``--churn-floor``, re-running
+``benchmarks/serving.py``'s ``churn_compose_bench`` at its largest
+``n_live`` cell).  The ``repro.serve`` re-export surface is also
+import-checked, so the PR 7 package split can't silently drop the
+historical flat names.
+
 This is a same-machine tool: committed numbers are only comparable to
 runs on comparable hardware, so the intended use is "run the benchmark
 before and after a change on one box" (or a pinned CI runner), not
@@ -51,6 +61,34 @@ _GUARDED_PATHS = ("fast", "event_delta", "dag_fast", "slice_fast",
 #: the guard is deliberately looser so shared-runner noise doesn't
 #: flap it, while still catching a devectorized batched path)
 _BATCHED_FLOOR = 2.0
+
+#: floor on the fresh incremental-vs-batch compose-time speedup at the
+#: churn benchmark's largest n_live cell (benchmarks/serving.py,
+#: ``churn_compose_bench``; the committed BENCH_serving.json records
+#: >= 2x at 64 live requests — same looser-than-committed discipline
+#: as the batched floor, catching a live path that degenerated into
+#: rebuild-every-step without flapping on runner noise)
+_CHURN_FLOOR = 1.6
+
+#: the PR 7 package split re-exports the historical flat import
+#: surface; a rename that silently drops one of these breaks every
+#: external consumer, so the guard imports them by name
+_SERVE_SURFACE = ("Request", "ScheduleCache", "SchedulerPolicy",
+                  "ServingEngine", "Signature")
+
+
+def _surface_regressions() -> list[str]:
+    out = []
+    for mod in ("repro.serve", "repro.serve.engine"):
+        try:
+            m = __import__(mod, fromlist=list(_SERVE_SURFACE))
+        except ImportError as e:
+            out.append(f"import surface: {mod} failed to import ({e})")
+            continue
+        for name in _SERVE_SURFACE:
+            if not hasattr(m, name):
+                out.append(f"import surface: {mod}.{name} is gone")
+    return out
 
 
 def compare(committed: dict, fresh: dict, threshold: float,
@@ -92,6 +130,12 @@ def main(argv=None) -> int:
                     default=_BATCHED_FLOOR,
                     help="minimum batched/sequential effective-move "
                          "throughput ratio at n >= 512 (0 disables)")
+    ap.add_argument("--churn-floor", type=float, default=_CHURN_FLOOR,
+                    help="minimum incremental/batch compose-time "
+                         "speedup at the churn benchmark's largest "
+                         "n_live cell (0 disables; re-runs "
+                         "benchmarks/serving.py churn_compose_bench "
+                         "fresh)")
     ap.add_argument("--quick", action="store_true",
                     help="skip the slow oracle/full baselines entirely "
                          "(fresh run measures only the guarded cells)")
@@ -126,6 +170,17 @@ def main(argv=None) -> int:
             regressions.append(
                 f"batched event-refine throughput ratio at n>=512: "
                 f"{ratio:.2f}x < floor {args.batched_floor:.2f}x")
+    regressions += _surface_regressions()
+    if args.churn_floor > 0:
+        import serving
+        rows = serving.churn_compose_bench(print_fn=lambda *_: None)
+        top = max(rows, key=lambda r: r["n_live"])
+        if top["compose_speedup"] < args.churn_floor:
+            regressions.append(
+                f"incremental compose speedup under churn at "
+                f"n_live={top['n_live']}: "
+                f"{top['compose_speedup']:.2f}x < floor "
+                f"{args.churn_floor:.2f}x")
     if regressions:
         print("\nREGRESSION: construction wall time exceeded "
               f"{args.threshold:.2f}x the committed baseline:")

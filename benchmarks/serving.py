@@ -47,7 +47,7 @@ from repro.core.tpu import (decode_profile, fifo_rounds,
                             round_time)
 
 __all__ = ["run", "simulate_load", "engine_cache_stats",
-           "kv_bucket_sweep"]
+           "kv_bucket_sweep", "churn_compose_bench"]
 
 #: budget for the refine_model axis rows (full-simulation equivalents;
 #: the event model delta path stretches this ~10x in effective moves)
@@ -303,13 +303,158 @@ def kv_bucket_sweep(buckets=(64, 128, 256, 512), *, seed: int = 0,
     return out
 
 
+#: model-free stand-in for a populated KV cache: ``build_dag_triples``
+#: only checks ``r.cache is None`` to pick prefill vs decode
+_DECODED = object()
+
+
+def _churn_steps(n_live: int, steps: int, churn: float, seed: int):
+    """Deterministic join/leave trajectory: per-step snapshots
+    ``[(rid, phase, prompt_len, pos), ...]`` around a target of
+    ``n_live`` live requests, with Poisson(``churn``) joins and leaves
+    per step.  Snapshots are plain tuples so the batch and incremental
+    paths can rebuild *identical* request sets independently."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    nxt = 0
+    live: list[list] = []
+
+    def join(phase: str = "prefill"):
+        nonlocal nxt
+        plen = int(rng.integers(8, 64))
+        pos = plen + int(rng.integers(1, 256)) if phase == "decode" else 0
+        live.append([nxt, phase, plen, pos])
+        nxt += 1
+
+    for _ in range(n_live):
+        join("decode")
+    out = []
+    for _ in range(steps):
+        out.append([tuple(r) for r in live])
+        for r in live:                       # advance one engine step
+            if r[1] == "prefill":
+                r[1], r[3] = "decode", r[2] + 1
+            else:
+                r[3] += 1
+        for _ in range(int(rng.poisson(churn))):
+            if len(live) > max(1, n_live // 2):
+                live.pop(int(rng.integers(len(live))))
+        for _ in range(int(rng.poisson(churn))):
+            join()
+    return out
+
+
+def churn_compose_bench(cells=(16, 64), *, steps: int = 12,
+                        churn: float = 2.0, seed: int = 0,
+                        repeats: int = 3, print_fn=print) -> list[dict]:
+    """Incremental vs batch *compose cost* under join/leave churn
+    (PR 7).
+
+    Model-free: requests are traced into per-layer chains
+    (:func:`repro.serve.engine.build_dag_triples`) but never executed,
+    so the cell isolates exactly what ``composition="incremental"``
+    changes — the per-step scheduling work.  Both paths see identical
+    step snapshots; the batch path recomposes cold every step
+    (``Composer.compose_dag`` with the cache off), the incremental
+    path extends/retires the live :class:`GreedyFrontier`
+    (:class:`repro.serve.live.LiveComposition`).  ``compose_speedup``
+    compares steady-state means (the incremental path's step 0 *is* a
+    cold build, so it is excluded from both means), best-of-
+    ``repeats`` per path — the same min-of-k wall protocol as
+    ``benchmarks/scaling.py``; ``modelled_regret_mean`` is the mean
+    per-step modelled round-time ratio minus one — what keeping the
+    composition warm costs in schedule quality, in the same round
+    currency the engine guard uses.
+    """
+    import time
+
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.graph.kernel_graph import (arch_kv_bytes_per_token,
+                                          estimate_n_params)
+    from repro.serve import (Composer, LiveComposition, Request,
+                             ScheduleCache, SchedulerPolicy,
+                             build_dag_triples)
+
+    cfg = get_config("qwen1.5-0.5b", "smoke")
+    n_params = estimate_n_params(cfg)
+    kvb = arch_kv_bytes_per_token(cfg)
+    device = make_serving_device()
+    weights = 2.0 * n_params
+
+    def reqs_of(snap):
+        reqs = []
+        for rid, phase, plen, pos in snap:
+            r = Request(rid, np.zeros(plen, np.int32))
+            if phase == "decode":
+                r.cache, r.pos = _DECODED, pos
+            reqs.append(r)
+        return reqs
+
+    def run_path(snaps, composition: str):
+        pol = SchedulerPolicy(kind="symbiotic", respect_deps=True,
+                              cache=False, composition=composition)
+        cache = ScheduleCache()
+        comp = Composer(pol, device, weights, cache)
+        live = (LiveComposition(comp) if composition == "incremental"
+                else None)
+        wall, modelled = [], []
+        for snap in snaps:
+            triples, traced = build_dag_triples(
+                cfg, reqs_of(snap), n_params=n_params,
+                kv_bytes_per_token=kvb)
+            t0 = time.perf_counter()
+            rounds = (live.compose_dag(triples, traced) if live
+                      else comp.compose_dag(triples, traced))
+            wall.append(time.perf_counter() - t0)
+            modelled.append(sum(comp.dag_round_time(rd)
+                                for rd in rounds))
+        return wall, modelled, cache.stats()
+
+    out = []
+    print_fn("# Incremental vs batch compose cost under churn "
+             "(traced qwen chains, model-free)")
+    print_fn("n_live,steps,batch_ms_per_step,incremental_ms_per_step,"
+             "speedup,modelled_regret_pct,joins,leaves,rebuilds")
+    for n_live in cells:
+        snaps = _churn_steps(n_live, steps, churn, seed)
+        # steady state: step 0 is the incremental path's cold seed
+        mean = lambda xs: sum(xs) / max(len(xs), 1)  # noqa: E731
+        t_batch = t_inc = float("inf")
+        for _ in range(max(repeats, 1)):
+            w_b, m_b, _ = run_path(snaps, "batch")
+            w_i, m_i, st = run_path(snaps, "incremental")
+            t_batch = min(t_batch, mean(w_b[1:]))
+            t_inc = min(t_inc, mean(w_i[1:]))
+        regret = mean([ti / tb - 1.0 for ti, tb in
+                       zip(m_i[1:], m_b[1:])])
+        rec = {"n_live": n_live, "steps": steps, "churn": churn,
+               "repeats": max(repeats, 1),
+               "batch_compose_s_per_step": t_batch,
+               "incremental_compose_s_per_step": t_inc,
+               "compose_speedup": t_batch / max(t_inc, 1e-12),
+               "modelled_regret_mean": regret,
+               "incremental_joins": st["incremental_joins"],
+               "incremental_leaves": st["incremental_leaves"],
+               "frontier_rebuilds": st["frontier_rebuilds"]}
+        out.append(rec)
+        print_fn(f"{n_live},{steps},{t_batch * 1e3:.1f},"
+                 f"{t_inc * 1e3:.1f},{rec['compose_speedup']:.2f},"
+                 f"{regret * 100:.2f},{st['incremental_joins']},"
+                 f"{st['incremental_leaves']},"
+                 f"{st['frontier_rebuilds']}")
+    return out
+
+
 #: the refine_model axis rides along with the classic three policies
 _POLICIES = ("fifo", "symbiotic", "refined", "refined-round",
              "refined-event")
 
 
 def run(print_fn=print, with_engine: bool = True,
-        with_kv_sweep: bool = True) -> dict:
+        with_kv_sweep: bool = True, with_churn: bool = True) -> dict:
     print_fn("# Symbiotic continuous batching (7B cost model, v5e)")
     print_fn("mix,policy,rounds,time_ms,tok_per_s,speedup_vs_fifo")
     mixes = []
@@ -332,6 +477,8 @@ def run(print_fn=print, with_engine: bool = True,
         out["engine_cache"] = engine_cache_stats(print_fn=print_fn)
     if with_kv_sweep:
         out["kv_bucket_sweep"] = kv_bucket_sweep(print_fn=print_fn)
+    if with_churn:
+        out["churn"] = churn_compose_bench(print_fn=print_fn)
     return out
 
 
@@ -341,9 +488,13 @@ def main(argv=None) -> int:
     ap.add_argument("--no-engine", action="store_true",
                     help="skip the real-engine sections (cost-model "
                          "mixes only)")
+    ap.add_argument("--no-churn", action="store_true",
+                    help="skip the incremental-vs-batch churn cell "
+                         "(model-free wall-clock measurement)")
     args = ap.parse_args(argv)
     out = run(with_engine=not args.no_engine,
-              with_kv_sweep=not args.no_engine)
+              with_kv_sweep=not args.no_engine,
+              with_churn=not args.no_churn)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {args.out}")

@@ -42,12 +42,252 @@ from repro.core.fastscore import (ProfileTable, _absorb, _comb_ratio_scalar,
                                   pair_score_matrix)
 from repro.core.refine import DeltaEvaluator, _apply, _moves
 from repro.core.resources import DeviceModel, KernelProfile
-from repro.core.scheduler import Round, Schedule
+from repro.core.scheduler import Round, Schedule, _sort_key
 from repro.core.simulator import simulate
 
 from .delta import GatedDeltaEvaluator
 
-__all__ = ["greedy_order_dag", "refine_order_dag"]
+__all__ = ["GreedyFrontier", "greedy_order_dag", "refine_order_dag"]
+
+
+class _FrontierRound:
+    """One live round: member profiles plus the ProfileCombine state
+    the incremental greedy maintained for it (the virtual combined
+    profile new candidates are scored against)."""
+
+    __slots__ = ("members", "comb")
+
+    def __init__(self, members: list[KernelProfile], comb: _CombState):
+        self.members = members
+        self.comb = comb
+
+
+def _single_comb(table: ProfileTable, i: int) -> _CombState:
+    return _CombState(demand=table.per_unit[i].copy(),
+                      bpu=float(table.bpu[i]),
+                      n_blocks=float(table.n_blocks[i]),
+                      inst=float(table.inst[i]),
+                      r=float(table.r[i]))
+
+
+def _fold_comb(table: ProfileTable, idxs: Sequence[int],
+               device: DeviceModel) -> _CombState:
+    """ProfileCombine left fold over ``table[idxs]`` — the same
+    single-then-absorb arithmetic the incremental greedy applies, so a
+    re-derived round comb scores candidates the way the greedy that
+    built the round would have."""
+    comb = _single_comb(table, idxs[0])
+    for c in idxs[1:]:
+        comb = _absorb(comb, table, c, device)
+    return comb
+
+
+class GreedyFrontier:
+    """Checkpointable round-frontier state of the ready-set greedy.
+
+    The batch greedy (:func:`greedy_order_dag`) discards its per-round
+    ProfileCombine states when it returns; this class keeps them, so a
+    *live* composition can be extended (a new request's chain placed
+    stage by stage where Algorithm 1's own scoring puts it — the
+    :func:`repro.core.fastscore.warm_start_insert` rule, generalized
+    to precedence chains) or shrunk (a finished request's stages
+    retired, affected combs re-folded) without recomposing from
+    scratch.  ``greedy_order_dag(..., frontier=...)`` grows one during
+    a cold run; :meth:`seed` re-derives one from any finished round
+    composition (e.g. a refined or guard-selected one).
+
+    Precedence discipline: members of one round are mutually
+    independent, and a chain's stage ``i+1`` is always placed in a
+    strictly later round than stage ``i`` (``min_round`` in
+    :meth:`insert_chain`), the same invariant the batch greedy
+    enforces by closing rounds before unblocking successors.  Cross-
+    chain edges are assumed absent — true for traced serving
+    workloads, where edges connect stages of one request only.
+    """
+
+    def __init__(self, device: DeviceModel):
+        self.device = device
+        self.rounds: list[_FrontierRound] = []
+
+    # -- construction ---------------------------------------------------
+    def reset(self) -> None:
+        self.rounds = []
+
+    def _record(self, members: list[KernelProfile],
+                comb: _CombState) -> None:
+        """Append a closed round (used by ``greedy_order_dag``)."""
+        self.rounds.append(_FrontierRound(list(members), comb))
+
+    def seed(self, rounds: Sequence[Sequence[KernelProfile]]) -> None:
+        """Re-derive frontier state from a finished composition."""
+        self.reset()
+        flat = [k for rd in rounds for k in rd]
+        if not flat:
+            return
+        table = ProfileTable.build(flat, self.device)
+        base = 0
+        for rd in rounds:
+            idxs = list(range(base, base + len(rd)))
+            base += len(rd)
+            if not idxs:
+                continue
+            self.rounds.append(_FrontierRound(
+                list(rd), _fold_comb(table, idxs, self.device)))
+
+    # -- inspection -----------------------------------------------------
+    def round_names(self) -> list[list[str]]:
+        return [[k.name for k in rd.members] for rd in self.rounds]
+
+    def order(self) -> list[KernelProfile]:
+        return [k for rd in self.rounds for k in rd.members]
+
+    def _index_of(self, rd: _FrontierRound) -> int:
+        for i, cand in enumerate(self.rounds):
+            if cand is rd:
+                return i
+        raise ValueError("round no longer in frontier")
+
+    def _insert_sorted(self, rd: _FrontierRound,
+                       prof: KernelProfile) -> None:
+        """Keep Alg. 1's intra-round dispatch order (decreasing
+        shared-memory sort key, line 6/10) when a live placement joins
+        an existing round — same rule as ``Round.insert_sorted``."""
+        key = _sort_key(prof, self.device)
+        for i, existing in enumerate(rd.members):
+            if key > _sort_key(existing, self.device):
+                rd.members.insert(i, prof)
+                return
+        rd.members.append(prof)
+
+    # -- live mutation --------------------------------------------------
+    def _place_one(self, prof: KernelProfile, min_round: int,
+                   on_solo=None, max_round: int | None = None,
+                   table: ProfileTable | None = None,
+                   col: int = 0) -> _FrontierRound:
+        """Place one kernel into the best-scoring fitting round at
+        index >= ``min_round`` (the ``warm_start_insert`` rule against
+        each round's maintained comb).  ``max_round`` (exclusive)
+        bounds the scan so a chain's later stages keep existing rounds
+        reachable (:meth:`insert_chain` sets it to reserve one round
+        per remaining stage); when the bounded window has no fit the
+        scan falls back to the full suffix before going solo.  No fit
+        anywhere: ``on_solo``, when given, may expand the kernel into
+        co-schedulable slices plus a join (returning ``(slices,
+        join)``); otherwise a new solo round opens at ``min_round`` —
+        leaving every later existing round reachable for the chain's
+        later stages.  ``table``/``col`` let a caller placing many
+        kernels (``insert_chain``) pack them once instead of building
+        a one-row :class:`ProfileTable` per placement."""
+        if table is None:
+            table, col = ProfileTable.build([prof], self.device), 0
+        idx = np.asarray([col])
+
+        def scan(hi):
+            best, best_s = None, -np.inf
+            for rd in self.rounds[min_round:hi]:
+                scores, fits = _comb_scores(rd.comb, table, idx)
+                if bool(fits[0]) and float(scores[0]) > best_s:
+                    best, best_s = rd, float(scores[0])
+            return best
+
+        best = scan(max_round)
+        if (best is None and max_round is not None
+                and max_round < len(self.rounds)):
+            best = scan(None)
+        if best is not None:
+            self._insert_sorted(best, prof)
+            best.comb = _absorb(best.comb, table, col, self.device)
+            return best
+        if on_solo is not None:
+            exp = on_solo(prof)
+            if exp is not None:
+                parts, join = exp
+                slice_at = [self._place_one(p, min_round) for p in parts]
+                join_min = 1 + max(self._index_of(rd) for rd in slice_at)
+                return self._place_one(join, join_min)
+        rd = _FrontierRound([prof], _single_comb(table, col))
+        self.rounds.insert(min_round, rd)
+        return rd
+
+    def insert_chain(self, profiles: Sequence[KernelProfile],
+                     preds: Sequence[Sequence[int]] | None = None,
+                     *, on_solo=None) -> None:
+        """Extend the live composition with a new chain.
+
+        ``profiles`` are the chain's kernels in intra-chain
+        topological order; ``preds[i]`` lists indices (into
+        ``profiles``) that must retire in strictly earlier rounds than
+        stage ``i`` — default: the plain chain ``i-1 -> i``.
+        ``on_solo`` is the slice-expansion hook
+        (:func:`repro.slice.constrained.frontier_solo_expander`):
+        called when a stage fits no existing round, it may return
+        ``(slices, join)`` to place instead — slices share the stage's
+        ``min_round`` floor and the join lands strictly after all of
+        them, mirroring the lazy expansion of
+        :func:`repro.slice.greedy_order_slices`.
+        """
+        profiles = list(profiles)
+        if preds is None:
+            preds = [[i - 1] if i else [] for i in range(len(profiles))]
+        table = ProfileTable.build(profiles, self.device) \
+            if profiles else None
+        placed: list[_FrontierRound] = []
+        for i, prof in enumerate(profiles):
+            min_round = 0
+            for p in preds[i]:
+                min_round = max(min_round,
+                                self._index_of(placed[p]) + 1)
+            # Reserve one existing round per remaining stage: an
+            # unbounded best-score scan happily parks stage 0 in the
+            # *last* round, spilling the whole rest of the chain into
+            # fresh solo rounds — under churn the frontier balloons
+            # instead of threading the chain through the composition
+            # the way the batch ready-set greedy would.
+            remaining = len(profiles) - i - 1
+            max_round = (max(min_round, len(self.rounds) - remaining)
+                         if remaining else None)
+            placed.append(self._place_one(prof, min_round,
+                                          on_solo=on_solo,
+                                          max_round=max_round,
+                                          table=table, col=i))
+
+    def remove(self, names: set[str]) -> None:
+        """Retire kernels by name (a finished request's stages, slice
+        parts included); affected rounds re-fold their combs over the
+        surviving members, empty rounds close."""
+        kept: list[_FrontierRound] = []
+        dirty: list[_FrontierRound] = []
+        for rd in self.rounds:
+            before = len(rd.members)
+            rd.members = [k for k in rd.members if k.name not in names]
+            if not rd.members:
+                continue
+            if len(rd.members) != before:
+                dirty.append(rd)
+            kept.append(rd)
+        self.rounds = kept
+        for rd in dirty:
+            table = ProfileTable.build(rd.members, self.device)
+            rd.comb = _fold_comb(table, range(len(rd.members)),
+                                 self.device)
+
+    def refresh(self, profiles: dict[str, KernelProfile]) -> None:
+        """Swap members to current (drifted) profile objects by name
+        and re-fold every comb — O(n * D), run before scoring new
+        insertions against a step whose demands moved (decode kv
+        growth).  Names absent from ``profiles`` keep their old
+        profile object."""
+        for rd in self.rounds:
+            rd.members = [profiles.get(k.name, k) for k in rd.members]
+        flat = self.order()
+        if not flat:
+            return
+        table = ProfileTable.build(flat, self.device)
+        base = 0
+        for rd in self.rounds:
+            rd.comb = _fold_comb(
+                table, range(base, base + len(rd.members)), self.device)
+            base += len(rd.members)
 
 
 def _edge_arrays(n: int, edges: Iterable[tuple[int, int]]
@@ -64,13 +304,21 @@ def _edge_arrays(n: int, edges: Iterable[tuple[int, int]]
 
 def greedy_order_dag(kernels: Sequence[KernelProfile],
                      device: DeviceModel,
-                     *, edges: Iterable[tuple[int, int]] = ()) -> Schedule:
+                     *, edges: Iterable[tuple[int, int]] = (),
+                     frontier: "GreedyFrontier | None" = None) -> Schedule:
     """Ready-set Algorithm 1 over a kernel DAG.
 
     ``edges`` are ``(u, v)`` index pairs into ``kernels``: u must
     complete before v starts.  Raises ``ValueError`` on a cycle.  With
     ``edges=()`` this is exactly ``greedy_order_fast`` — same rounds,
     same intra-round order, same tie-breaking.
+
+    ``frontier`` grows a :class:`GreedyFrontier` during the run: every
+    closed round is recorded with the exact ProfileCombine state the
+    greedy maintained for it (reset first, so the sink always holds
+    this run's composition).  A live caller
+    (:class:`repro.serve.live.LiveComposition`) later extends or
+    shrinks that state instead of re-running this function cold.
 
     A stage whose profile saturates a device capacity on its own can
     only ever land in a solo round here; callers with such oversized
@@ -79,6 +327,8 @@ def greedy_order_dag(kernels: Sequence[KernelProfile],
     co-schedulable slices.
     """
     n = len(kernels)
+    if frontier is not None:
+        frontier.reset()
     if n == 0:
         return Schedule([])
     succs, indeg = _edge_arrays(n, edges)
@@ -105,6 +355,7 @@ def greedy_order_dag(kernels: Sequence[KernelProfile],
             raise ValueError("precedence edges contain a cycle")
         rd = Round()
         members: list[int] = []
+        comb: _CombState | None = None
         if ready.size == 1:
             solo = int(ready[0])
             kill(solo)
@@ -167,6 +418,14 @@ def greedy_order_dag(kernels: Sequence[KernelProfile],
         for m in members:
             for v in succs[m]:
                 indeg[v] -= 1
+        if frontier is not None:
+            # rd.kernels, not members: the frontier keeps Alg. 1's
+            # intra-round dispatch order (decreasing shared memory),
+            # not the absorption order.
+            frontier._record(
+                list(rd.kernels),
+                comb if comb is not None
+                else _single_comb(table, members[0]))
         rounds.append(rd)
     return Schedule(rounds)
 

@@ -1,5 +1,18 @@
-"""Serving substrate: KV-cache engine + symbiotic round scheduler."""
+"""Serving substrate: KV-cache engine + symbiotic round scheduler.
 
-from .engine import Request, ScheduleCache, SchedulerPolicy, ServingEngine
+A package since PR 7: :mod:`.engine` (step loop + exact execution),
+:mod:`.composer` (the per-step composition pipeline), :mod:`.cache`
+(the namespaced ScheduleCache), :mod:`.live` (cross-step incremental
+composition).  The historical flat import surface is preserved here
+and in :mod:`.engine`.
+"""
 
-__all__ = ["Request", "ScheduleCache", "SchedulerPolicy", "ServingEngine"]
+from .cache import ScheduleCache, Signature
+from .composer import Composer, GatedGuard
+from .engine import (Request, SchedulerPolicy, ServingEngine,
+                     build_dag_triples)
+from .live import LiveComposition
+
+__all__ = ["Request", "ScheduleCache", "SchedulerPolicy",
+           "ServingEngine", "Signature", "Composer", "GatedGuard",
+           "LiveComposition", "build_dag_triples"]

@@ -1,0 +1,205 @@
+"""The serving ``ScheduleCache``: memoised round compositions.
+
+Split out of the engine monolith in PR 7.  The cache knows nothing
+about models or execution — it stores round *patterns* (partitions of
+work-item signatures) keyed on the multiset of signatures in the step,
+plus the counters the engine layers above it increment
+(``dag_hits``, ``replay_revalidations``, the warm-start audit, and
+since PR 7 the live-composition and gated-guard counters).
+
+Keys are explicitly namespaced: every key is a 3-tuple
+``(namespace, kind, sigs)`` with ``namespace`` one of
+
+* ``"flat"`` — the per-request work-item path
+  (:meth:`repro.serve.composer.Composer.compose`), ``sigs`` the sorted
+  per-item signature tuple, and
+* ``"dag"``  — the ``respect_deps`` traced-chain path
+  (:meth:`repro.serve.composer.Composer.compose_dag`), ``sigs`` the
+  sorted per-request *chain*-signature tuple.
+
+The namespaces make the PR 3 cache-bypass wart structurally
+impossible: a flat-signature pattern can never be consulted on a
+traced step (and vice versa) because the key spaces are disjoint, and
+:meth:`lookup` asserts the caller names the namespace it expects.
+:meth:`near_miss` only ever scans the flat namespace — a one-request
+warm adaptation of a *chain* pattern is the live-composition layer's
+job (:class:`repro.serve.live.LiveComposition`), not the cache's.
+"""
+
+from __future__ import annotations
+
+from collections import Counter, OrderedDict
+
+__all__ = ["ScheduleCache", "Signature"]
+
+#: Work-item signature: what makes two items schedule-equivalent.
+#: Prefill chunks are keyed by exact token count (compiled geometry);
+#: decode steps by their kv-len bucket — within a bucket the demand
+#: vectors are close enough that the greedy + guard + refine pipeline
+#: composes the same round structure.
+Signature = tuple[str, int]
+
+
+class ScheduleCache:
+    """Memoised round compositions keyed on the multiset of work-item
+    signatures.
+
+    Steady-state decode-heavy serving repeats near-identical
+    compositions every ``step()``: the same live requests, each one
+    kv-token longer.  Quantizing decode kv-lens into buckets makes
+    consecutive steps hash to the same key, so the engine replays the
+    cached round *pattern* (a partition of signatures) instead of
+    re-running greedy + guard + refine.  Patterns are applied by
+    matching signatures, never by request identity, so any same-mix
+    step can reuse them; generated tokens are unaffected because
+    execution is exact per request regardless of round membership.
+    """
+
+    def __init__(self, kv_bucket: int = 256, max_entries: int = 256):
+        self.kv_bucket = kv_bucket
+        self.max_entries = max_entries
+        self.hits = 0
+        self.misses = 0
+        #: near-miss adaptations that seeded a composition (see
+        #: :meth:`near_miss`); every warm hit is also counted a miss,
+        #: since :meth:`lookup` failed first.
+        self.warm_hits = 0
+        #: hits served on the respect_deps path (coarsened per-request
+        #: chain-signature keys); a subset of ``hits``.
+        self.dag_hits = 0
+        #: replays rejected by the stale-replay re-validation (modelled
+        #: drift above ``SchedulerPolicy.replay_drift_tol`` or a
+        #: capacity violation on actual demands) and recomposed cold.
+        self.replay_revalidations = 0
+        #: warm-start quality audit (ROADMAP item): on a sampled
+        #: fraction of warm hits the engine also recomputes the cold
+        #: greedy composition and records the modelled regret
+        #: ``t_warm / t_cold - 1`` (round cost model; negative means
+        #: the adapted composition modelled *better* than cold).
+        self.warm_sampled = 0
+        self.warm_regret_total = 0.0
+        #: live-composition counters (PR 7,
+        #: ``SchedulerPolicy.composition="incremental"``): chains
+        #: extended into / retired from the live frontier, and cold
+        #: recompositions forced by the drift backstop.
+        self.incremental_joins = 0
+        self.incremental_leaves = 0
+        self.frontier_rebuilds = 0
+        #: full gated simulations *not* paid because the per-step
+        #: gated guard resumed from a checkpointed prefix instead of
+        #: re-simulating from scratch (PR 7; fractional — each delta
+        #: evaluation saves ``1 - suffix_fraction`` of a full sim).
+        self.gated_sims_saved = 0.0
+        self._store: OrderedDict[tuple, tuple[tuple[Signature, ...], ...]] \
+            = OrderedDict()
+        #: modelled time of the composition each pattern was stored
+        #: from (same key space as ``_store``); the baseline the
+        #: stale-replay drift check compares against.
+        self._times: dict[tuple, float | None] = {}
+
+    def signature(self, kind: str, length: int) -> Signature:
+        if kind == "decode":
+            return ("d", length // self.kv_bucket)
+        return ("p", length)
+
+    @staticmethod
+    def key_of(sigs: list[Signature]) -> tuple:
+        return tuple(sorted(sigs))
+
+    def lookup(self, key: tuple, namespace: str | None = None):
+        """Pattern stored under ``key``, bumping hit/miss counters.
+
+        ``namespace`` asserts the key belongs to the path consulting
+        it (``"flat"`` or ``"dag"``): a traced step consulting a
+        flat-signature key — the PR 3 bypass wart — is a programming
+        error, caught here instead of silently replaying a pattern
+        from the wrong key space."""
+        assert key[0] in ("flat", "dag"), f"un-namespaced cache key {key!r}"
+        if namespace is not None:
+            assert key[0] == namespace, \
+                f"{namespace} path consulted a {key[0]!r} key"
+        pat = self._store.get(key)
+        if pat is None:
+            self.misses += 1
+            return None
+        self._store.move_to_end(key)
+        self.hits += 1
+        return pat
+
+    def store(self, key: tuple,
+              pattern: tuple[tuple[Signature, ...], ...],
+              t_model: float | None = None) -> None:
+        assert key[0] in ("flat", "dag"), f"un-namespaced cache key {key!r}"
+        self._store[key] = pattern
+        self._times[key] = t_model
+        # Assigning to an existing key does NOT reorder an OrderedDict:
+        # without this, a refreshed entry keeps its stale position and
+        # is evicted as if it were never re-stored.
+        self._store.move_to_end(key)
+        if len(self._store) > self.max_entries:
+            old, _ = self._store.popitem(last=False)
+            self._times.pop(old, None)
+
+    def time_of(self, key: tuple) -> float | None:
+        """Modelled time recorded when ``key``'s pattern was stored
+        (None for patterns stored without one)."""
+        return self._times.get(key)
+
+    def near_miss(self, key: tuple):
+        """Cached **flat** entry whose signature multiset differs from
+        ``key`` by exactly one occurrence — one request joined or one
+        left the mix since the cached step.
+
+        ``key`` must have the engine's shape ``("flat", kind, sigs)``
+        with ``sigs`` the sorted signature tuple from :meth:`key_of`.
+        Returns ``(pattern, added, removed)`` — ``added`` the
+        signatures present now but not in the cached mix (the joined
+        request), ``removed`` the cached-only ones (the departed
+        request) — or ``None``.  Most recently used entries are
+        preferred.  Only the ``"flat"`` namespace is scanned: chain
+        patterns adapt through the live frontier
+        (:class:`repro.serve.live.LiveComposition`), not here.  Does
+        not bump hit counters: callers count ``warm_hits`` only when
+        the adaptation is actually used.
+        """
+        ns, kind, sigs = key
+        assert ns == "flat", f"near_miss on a {ns!r} key"
+        want = Counter(sigs)
+        n = len(sigs)
+        for k2 in reversed(self._store):
+            if (k2[0] != "flat" or k2[1] != kind or k2 == key
+                    or abs(len(k2[2]) - n) != 1):
+                continue
+            have = Counter(k2[2])
+            added = list((want - have).elements())
+            removed = list((have - want).elements())
+            if len(added) + len(removed) == 1:
+                return self._store[k2], added, removed
+        return None
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def record_warm_regret(self, regret: float) -> None:
+        self.warm_sampled += 1
+        self.warm_regret_total += regret
+
+    @property
+    def warm_regret_mean(self) -> float:
+        return (self.warm_regret_total / self.warm_sampled
+                if self.warm_sampled else 0.0)
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "warm_hits": self.warm_hits,
+                "dag_hits": self.dag_hits,
+                "replay_revalidations": self.replay_revalidations,
+                "warm_sampled": self.warm_sampled,
+                "warm_regret_mean": self.warm_regret_mean,
+                "incremental_joins": self.incremental_joins,
+                "incremental_leaves": self.incremental_leaves,
+                "frontier_rebuilds": self.frontier_rebuilds,
+                "gated_sims_saved": self.gated_sims_saved,
+                "hit_rate": self.hit_rate, "entries": len(self._store)}

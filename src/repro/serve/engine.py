@@ -17,32 +17,37 @@ The engine actually executes (greedy decoding, CPU-sized models) in the
 scheduled order, and reports per-round roofline times from the event
 simulator so the ordering gain is measurable (see
 ``benchmarks/serving.py``).
+
+Since PR 7 this module holds only the step loop and exact execution;
+its composition pipeline lives in :mod:`repro.serve.composer`
+(:class:`~repro.serve.composer.Composer`), the cache in
+:mod:`repro.serve.cache`, and the cross-step incremental frontier in
+:mod:`repro.serve.live` (:class:`~repro.serve.live.LiveComposition`).
+The historical import surface — ``ScheduleCache``, ``Signature``, the
+``ServingEngine._compose*`` helpers — is preserved here.
 """
 
 from __future__ import annotations
 
-from collections import Counter, OrderedDict, deque
 from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Schedule
-from repro.core.fastscore import greedy_order_fast, warm_start_insert
-from repro.core.refine import refine_order
-from repro.core.tpu import (TpuWorkItem, decode_profile, fifo_rounds,
+from repro.core.tpu import (TpuWorkItem, decode_profile,
                             make_serving_device, prefill_profile,
                             round_time)
-from repro.graph.constrained import greedy_order_dag, refine_order_dag
-from repro.graph.delta import _FastGatedSim
 from repro.graph.kernel_graph import trace_arch
-from repro.graph.streams import fifo_rounds_dag
-from repro.slice import KernelSlicer, greedy_order_slices, join_item
 from repro.models import transformer as T
 from repro.models.common import ModelConfig
 
-__all__ = ["Request", "ServingEngine", "SchedulerPolicy", "ScheduleCache"]
+from .cache import ScheduleCache, Signature
+from .composer import Composer
+from .live import LiveComposition
+
+__all__ = ["Request", "ServingEngine", "SchedulerPolicy",
+           "ScheduleCache", "Signature", "build_dag_triples"]
 
 
 @dataclass
@@ -111,10 +116,15 @@ class SchedulerPolicy:
     #: flat launch orders (:class:`repro.graph.DagEventSimulator` over
     #: the expanded slice/join edges) — the same currency
     #: ``benchmarks/slicing.py`` scores, letting serving accept
-    #: compositions whose slice rounds genuinely co-execute.  The
-    #: stale-replay drift re-validation stays in the round currency
-    #: either way (it compares a replay against its own stored time,
-    #: not against fifo).
+    #: compositions whose slice rounds genuinely co-execute.  Since
+    #: PR 7 the gated guard is delta-evaluated per step: candidates
+    #: over the same kernel set resume from the first candidate's
+    #: checkpoints instead of re-simulating from scratch
+    #: (:class:`repro.serve.composer.GatedGuard`; saved full-sim
+    #: equivalents in ``ScheduleCache.stats()["gated_sims_saved"]``).
+    #: The stale-replay drift re-validation stays in the round
+    #: currency either way (it compares a replay against its own
+    #: stored time, not against fifo).
     dag_guard: str = "rounds"
     #: ScheduleCache: reuse round compositions across steps whose
     #: work-item mix is equivalent (decode kv-lens bucketized).
@@ -131,7 +141,10 @@ class SchedulerPolicy:
     #: optimistically; the engine re-validates and recomposes cold
     #: (counted as ``replay_revalidations`` in
     #: ``ScheduleCache.stats()``).  <= 0 disables (legacy optimistic
-    #: replay).
+    #: replay).  ``composition="incremental"`` reuses the same knob as
+    #: its drift backstop: the live composition's modelled ratio
+    #: against dep-aware arrival order may drift at most this fraction
+    #: from the ratio at the last cold (re)build.
     replay_drift_tol: float = 0.05
     #: Warm-start quality tracking: audit this fraction of warm hits
     #: by also recomputing the cold greedy composition and recording
@@ -152,146 +165,56 @@ class SchedulerPolicy:
     #: Candidate batch per vectorized pass when
     #: ``refine_backend="batched"``.
     refine_batch: int = 128
+    #: How the respect_deps path composes across steps (PR 7):
+    #: "batch" recomposes every step from scratch (optionally through
+    #: the ScheduleCache); "incremental" keeps the ready-set greedy's
+    #: round-frontier state live across steps
+    #: (:class:`repro.serve.live.LiveComposition`) — joining requests'
+    #: chains are placed by Algorithm 1's own scoring into the
+    #: existing composition, leaving requests' stages are retired in
+    #: place, and everything else refreshes without moving.  Counters
+    #: in ``ScheduleCache.stats()``: ``incremental_joins``,
+    #: ``incremental_leaves``, ``frontier_rebuilds``.  Tokens are
+    #: bit-identical either way (execution is exact per request); only
+    #: per-step compose cost and modelled round times differ.  No
+    #: effect on the flat (``respect_deps=False``) path.
+    composition: str = "batch"
 
 
-#: Work-item signature: what makes two items schedule-equivalent.
-#: Prefill chunks are keyed by exact token count (compiled geometry);
-#: decode steps by their kv-len bucket — within a bucket the demand
-#: vectors are close enough that the greedy + guard + refine pipeline
-#: composes the same round structure.
-Signature = tuple[str, int]
+def build_dag_triples(cfg: ModelConfig, reqs: list[Request], *,
+                      n_params: float, kv_bytes_per_token: float,
+                      max_stages: int | None = None):
+    """Trace live requests into per-layer work items.
 
-
-class ScheduleCache:
-    """Memoised round compositions keyed on the multiset of work-item
-    signatures.
-
-    Steady-state decode-heavy serving repeats near-identical
-    compositions every ``step()``: the same live requests, each one
-    kv-token longer.  Quantizing decode kv-lens into buckets makes
-    consecutive steps hash to the same key, so the engine replays the
-    cached round *pattern* (a partition of signatures) instead of
-    re-running greedy + guard + refine.  Patterns are applied by
-    matching signatures, never by request identity, so any same-mix
-    step can reuse them; generated tokens are unaffected because
-    execution is exact per request regardless of round membership.
+    Every request expands into its traced chain of layer-stage items
+    (:func:`repro.graph.trace_arch`).  Only the *tail* item of a chain
+    carries its executable kind ``"prefill"``/``"decode"`` — the
+    engine executes a request's forward pass exactly, as one unit —
+    while interior stages carry kind ``"frag"`` and exist for round
+    composition and modelled time only.  Returns ``(triples,
+    traced)``; module-level so benchmark drivers can compose traced
+    steps without instantiating an engine
+    (``benchmarks/serving.py``'s churn workload).
     """
-
-    def __init__(self, kv_bucket: int = 256, max_entries: int = 256):
-        self.kv_bucket = kv_bucket
-        self.max_entries = max_entries
-        self.hits = 0
-        self.misses = 0
-        #: near-miss adaptations that seeded a composition (see
-        #: :meth:`near_miss`); every warm hit is also counted a miss,
-        #: since :meth:`lookup` failed first.
-        self.warm_hits = 0
-        #: hits served on the respect_deps path (coarsened per-request
-        #: chain-signature keys); a subset of ``hits``.
-        self.dag_hits = 0
-        #: replays rejected by the stale-replay re-validation (modelled
-        #: drift above ``SchedulerPolicy.replay_drift_tol`` or a
-        #: capacity violation on actual demands) and recomposed cold.
-        self.replay_revalidations = 0
-        #: warm-start quality audit (ROADMAP item): on a sampled
-        #: fraction of warm hits the engine also recomputes the cold
-        #: greedy composition and records the modelled regret
-        #: ``t_warm / t_cold - 1`` (round cost model; negative means
-        #: the adapted composition modelled *better* than cold).
-        self.warm_sampled = 0
-        self.warm_regret_total = 0.0
-        self._store: OrderedDict[tuple, tuple[tuple[Signature, ...], ...]] \
-            = OrderedDict()
-        #: modelled time of the composition each pattern was stored
-        #: from (same key space as ``_store``); the baseline the
-        #: stale-replay drift check compares against.
-        self._times: dict[tuple, float | None] = {}
-
-    def signature(self, kind: str, length: int) -> Signature:
-        if kind == "decode":
-            return ("d", length // self.kv_bucket)
-        return ("p", length)
-
-    @staticmethod
-    def key_of(sigs: list[Signature]) -> tuple:
-        return tuple(sorted(sigs))
-
-    def lookup(self, key: tuple):
-        pat = self._store.get(key)
-        if pat is None:
-            self.misses += 1
-            return None
-        self._store.move_to_end(key)
-        self.hits += 1
-        return pat
-
-    def store(self, key: tuple,
-              pattern: tuple[tuple[Signature, ...], ...],
-              t_model: float | None = None) -> None:
-        self._store[key] = pattern
-        self._times[key] = t_model
-        # Assigning to an existing key does NOT reorder an OrderedDict:
-        # without this, a refreshed entry keeps its stale position and
-        # is evicted as if it were never re-stored.
-        self._store.move_to_end(key)
-        if len(self._store) > self.max_entries:
-            old, _ = self._store.popitem(last=False)
-            self._times.pop(old, None)
-
-    def time_of(self, key: tuple) -> float | None:
-        """Modelled time recorded when ``key``'s pattern was stored
-        (None for patterns stored without one)."""
-        return self._times.get(key)
-
-    def near_miss(self, key: tuple):
-        """Cached entry whose signature multiset differs from ``key``
-        by exactly one occurrence — one request joined or one left the
-        mix since the cached step.
-
-        ``key`` must have the engine's shape ``(kind, sigs)`` with
-        ``sigs`` the sorted signature tuple from :meth:`key_of`.
-        Returns ``(pattern, added, removed)`` — ``added`` the
-        signatures present now but not in the cached mix (the joined
-        request), ``removed`` the cached-only ones (the departed
-        request) — or ``None``.  Most recently used entries are
-        preferred.  Does not bump hit counters: callers count
-        ``warm_hits`` only when the adaptation is actually used.
-        """
-        kind, sigs = key
-        want = Counter(sigs)
-        n = len(sigs)
-        for k2 in reversed(self._store):
-            if k2[0] != kind or k2 == key or abs(len(k2[1]) - n) != 1:
-                continue
-            have = Counter(k2[1])
-            added = list((want - have).elements())
-            removed = list((have - want).elements())
-            if len(added) + len(removed) == 1:
-                return self._store[k2], added, removed
-        return None
-
-    @property
-    def hit_rate(self) -> float:
-        n = self.hits + self.misses
-        return self.hits / n if n else 0.0
-
-    def record_warm_regret(self, regret: float) -> None:
-        self.warm_sampled += 1
-        self.warm_regret_total += regret
-
-    @property
-    def warm_regret_mean(self) -> float:
-        return (self.warm_regret_total / self.warm_sampled
-                if self.warm_sampled else 0.0)
-
-    def stats(self) -> dict:
-        return {"hits": self.hits, "misses": self.misses,
-                "warm_hits": self.warm_hits,
-                "dag_hits": self.dag_hits,
-                "replay_revalidations": self.replay_revalidations,
-                "warm_sampled": self.warm_sampled,
-                "warm_regret_mean": self.warm_regret_mean,
-                "hit_rate": self.hit_rate, "entries": len(self._store)}
+    spec = []
+    for r in reqs:
+        if r.cache is None:
+            spec.append(("prefill", int(len(r.prompt))))
+        else:
+            spec.append(("decode", r.pos))
+    traced = trace_arch(cfg, spec, n_params=n_params,
+                        kv_bytes_per_token=kv_bytes_per_token,
+                        max_stages=max_stages)
+    triples = []
+    for i, it in enumerate(traced.items):
+        owner = traced.owners[i]
+        r = reqs[owner]
+        if i == traced.tail_of[owner]:
+            kind = "prefill" if r.cache is None else "decode"
+        else:
+            kind = "frag"
+        triples.append((it, r, kind))
+    return triples, traced
 
 
 class ServingEngine:
@@ -312,6 +235,12 @@ class ServingEngine:
         self._round_times: list[float] = []
         self.schedule_cache = ScheduleCache(
             kv_bucket=self.policy.kv_bucket)
+        self.composer = Composer(self.policy, self.device,
+                                 self.weights_bytes,
+                                 self.schedule_cache)
+        self.live = (LiveComposition(self.composer)
+                     if self.policy.composition == "incremental"
+                     else None)
 
     # -- workload characterisation -------------------------------------
     def _kv_bytes_per_token(self) -> float:
@@ -345,556 +274,29 @@ class ServingEngine:
         return items
 
     def _work_items_dag(self):
-        """Per-layer work items for the ``respect_deps`` path.
-
-        Every live request expands into its traced chain of layer-stage
-        items (:func:`repro.graph.trace_arch` over this engine's model
-        config and cost model).  Only the *tail* item of a chain
-        triggers real execution — kind ``"prefill"``/``"decode"`` —
-        because the engine executes a request's forward pass exactly,
-        as one unit; interior stages carry kind ``"frag"`` and exist
-        for round composition and modelled time only.  Returns
-        ``(triples, traced)``.
-        """
+        """Per-layer work items for the ``respect_deps`` path
+        (see :func:`build_dag_triples`)."""
         reqs = [r for r in self.queue if not r.done]
-        spec = []
-        for r in reqs:
-            if r.cache is None:
-                spec.append(("prefill", int(len(r.prompt))))
-            else:
-                spec.append(("decode", r.pos))
-        traced = trace_arch(self.cfg, spec, n_params=self.n_params,
-                            kv_bytes_per_token=self._kv_bytes_per_token(),
-                            max_stages=self.policy.dag_max_stages)
-        triples = []
-        for i, it in enumerate(traced.items):
-            owner = traced.owners[i]
-            r = reqs[owner]
-            if i == traced.tail_of[owner]:
-                kind = "prefill" if r.cache is None else "decode"
-            else:
-                kind = "frag"
-            triples.append((it, r, kind))
-        return triples, traced
+        return build_dag_triples(
+            self.cfg, reqs, n_params=self.n_params,
+            kv_bytes_per_token=self._kv_bytes_per_token(),
+            max_stages=self.policy.dag_max_stages)
 
-    @staticmethod
-    def _dag_stage_key(name: str) -> str:
-        """``r3:d:L0:attn`` -> ``L0:attn``: the layer stage, dropping
-        the owning request — co-scheduled copies of one stage share
-        its weight stream.  Slice metadata after ``#``
-        (``r3:d:L0:attn#s1of4``, ``...#join``) is stripped too: slices
-        of one stage share the *parent's* stream, so a round charges
-        it once per distinct parent stage, never per slice."""
-        return name.split(":", 2)[2].split("#", 1)[0]
-
-    def _dag_round_time(self, rd) -> float:
-        """Round time on the respect_deps path: the weight stream
-        charged is the sum over the round's *distinct* layer stages of
-        that stage's own parameter share (``TpuWorkItem.weight_bytes``,
-        set by trace_arch; max across copies, so a prefill stage that
-        touches the full expert bank dominates a routed decode copy).
-        Charging the engine-wide ``weights_bytes`` here would bill the
-        whole model once per stage round — many times per step."""
-        shares: dict[str, float] = {}
-        for it, _, _ in rd:
-            key = self._dag_stage_key(it.name)
-            shares[key] = max(shares.get(key, 0.0), it.weight_bytes)
-        return round_time([t[0] for t in rd], self.device,
-                          sum(shares.values()))
+    # -- composition (delegated; historical private surface) -----------
+    def _compose(self, items) -> list[list]:
+        return self.composer.compose(items)
 
     def _compose_dag(self, triples, traced) -> list[list]:
-        """Round composition over the per-layer dependency graph.
-
-        The ready-set greedy (:func:`repro.graph.greedy_order_dag`)
-        composes rounds that mix stages of *different* requests while
-        every chain stays ordered across rounds; ``kind="refined"``
-        additionally runs the precedence-respecting local search on
-        the flat order.  With ``policy.slice_policy`` set the greedy
-        is the slice-aware one
-        (:func:`repro.slice.greedy_order_slices`): stages it cannot
-        pack are cut into co-schedulable slices, with the chain tail's
-        exact execution moved to the slice join.  The cost-model guard
-        compares against the dependency-aware arrival-order packing
-        (:func:`repro.graph.fifo_rounds_dag`) — plain ``fifo_rounds``
-        could co-schedule a stage with its own predecessor — in the
-        currency ``policy.dag_guard`` selects: the round cost model,
-        or the gated-event makespan (which is what lets slice rounds
-        win, see :meth:`_dag_gated_time`).
-
-        The ScheduleCache participates with coarsened per-request
-        *chain* signatures (kind, kv bucket, stage count) so that
-        steady-state decode mixes replay cached DAG patterns
-        (``dag_hits``); replayed patterns pass the same stale-replay
-        re-validation as the flat path.
-        """
-        profs = traced.graph.kernels
-        eids = traced.graph.edges_by_id()
-        by_name = {p.name: trip for p, trip in zip(profs, triples)}
-        dem = lambda k: k.demands  # noqa: E731 — profiles, not items
-
-        def modelled(rounds):
-            return sum(self._dag_round_time(rd) for rd in rounds)
-
-        def guard_time(rounds):
-            # Guard currency (policy.dag_guard): the round cost model,
-            # or the gated-event makespan of the composition's flat
-            # launch order — the latter sees slice rounds co-execute
-            # instead of billing each one the full stage stream.
-            if self.policy.dag_guard == "gated":
-                return self._dag_gated_time(rounds, traced)
-            return modelled(rounds)
-
-        fifo = [[by_name[p.name] for p in rd]
-                for rd in fifo_rounds_dag(profs, self.device, eids,
-                                          demands_of=dem)]
-        if self.policy.kind == "fifo":
-            return fifo
-        key = labels = None
-        if self.policy.cache:
-            key, labels = self._dag_key_and_labels(triples, traced)
-            pattern = self.schedule_cache.lookup(key)
-            if pattern is not None:
-                replay = self._dag_apply_pattern(pattern, triples,
-                                                 labels)
-                if replay is not None and self._replay_ok(
-                        key, replay, self._dag_round_time):
-                    # Counted a hit only when the replay is actually
-                    # served; rejected/failed replays recompose cold.
-                    self.schedule_cache.dag_hits += 1
-                    # The replay honours the same fifo guard as a cold
-                    # composition, so the "never modelled-worse than
-                    # dep-aware arrival order" invariant survives
-                    # cache hits.
-                    if guard_time(fifo) < guard_time(replay):
-                        return fifo
-                    return replay
-        sp = self.policy.slice_policy
-        if sp is None:
-            sched = greedy_order_dag(profs, self.device,
-                                     edges=traced.graph.edges)
-            names, sl_eids = by_name, eids
-        else:
-            slicer = KernelSlicer(sp, self.device)
-            extra: dict[str, tuple] = {}
-
-            def mk_slices(prof, k):
-                it, r, kind = by_name[prof.name]
-                parts = slicer.slice_item(it, k)
-                for part in parts:
-                    extra[part.name] = (part, r, "frag")
-                ji = join_item(it)
-                # The chain tail's exact execution moves to the join:
-                # it still runs exactly once, after every slice.
-                extra[ji.name] = (ji, r, kind)
-                return [part.profile() for part in parts]
-
-            def mk_join(prof):
-                return extra[prof.name.split("#", 1)[0] + "#join"][0] \
-                    .profile()
-
-            sl = greedy_order_slices(profs, self.device,
-                                     edges=traced.graph.edges,
-                                     policy=sp, make_slices=mk_slices,
-                                     make_join=mk_join)
-            sched = sl.schedule
-            names = dict(by_name)
-            names.update(extra)
-            sl_eids = sl.edges_by_id()
-        if self.policy.kind == "refined":
-            model = (self.policy.refine_model
-                     if self.policy.refine_model in ("round", "event",
-                                                     "gated")
-                     else "round")
-            order, _, _ = refine_order_dag(
-                sched.order, self.device, edge_ids=sl_eids, model=model,
-                budget=self.policy.refine_budget,
-                neighborhood=self.policy.neighborhood,
-                batch_size=(self.policy.refine_batch
-                            if self.policy.refine_backend == "batched"
-                            else None))
-            prof_rounds = fifo_rounds_dag(order, self.device, sl_eids,
-                                          demands_of=dem)
-        else:
-            prof_rounds = [rd.kernels for rd in sched.rounds]
-        composed = [[names[p.name] for p in rd] for rd in prof_rounds]
-        # Same guard as the flat path: never accept a composition the
-        # guard currency says is worse than (dep-aware) arrival order.
-        result = fifo if guard_time(fifo) < guard_time(composed) \
-            else composed
-        if key is not None:
-            self._dag_store(key, result, labels)
-        return result
+        return self.composer.compose_dag(triples, traced)
 
     def _dag_gated_time(self, rounds, traced) -> float:
-        """Gated-event makespan of a composition's flat launch order
-        (``policy.dag_guard == "gated"``).
+        return self.composer.dag_gated_time(rounds, traced)
 
-        Rebuilds the dependency structure from item names so replayed
-        compositions — whose slices were re-cut from cached patterns —
-        are scored too: parent edges come from the traced graph, a
-        sliced parent's in-edges fan out to its slices, its out-edges
-        hang off the ``#join`` marker, and slices close the diamond on
-        the join.  A flat order that is not topological (a corrupted
-        replay) scores ``inf`` and is rejected by the guard."""
-        profs, names = [], {}
-        for rd in rounds:
-            for trip in rd:
-                p = trip[0].profile()
-                profs.append(p)
-                names[p.name] = p
-        slices: dict[str, list] = {}
-        for p in profs:
-            parent, sep, sub = p.name.partition("#")
-            if sep and sub.startswith("s"):
-                slices.setdefault(parent, []).append(p)
-        ks = traced.graph.kernels
-        pairs: set[tuple[int, int]] = set()
-        for u, v in traced.graph.edges:
-            a, b = ks[u].name, ks[v].name
-            srcs = ([names.get(a + "#join")] if a in slices
-                    else [names.get(a)])
-            dsts = slices[b] if b in slices else [names.get(b)]
-            for s in srcs:
-                for d in dsts:
-                    if s is not None and d is not None:
-                        pairs.add((id(s), id(d)))
-        for parent, parts in slices.items():
-            j = names.get(parent + "#join")
-            if j is not None:
-                for s in parts:
-                    pairs.add((id(s), id(j)))
-        try:
-            # The flat-tuple twin of DagEventSimulator (bit-identical,
-            # tests/test_gated_delta.py) — the guard runs twice per
-            # compose step, so oracle speed matters here.
-            return _FastGatedSim(self.device, pairs).simulate(profs)[0]
-        except ValueError:
-            return float("inf")
-
-    # -- DAG-path ScheduleCache (coarsened chain signatures) -----------
     def _dag_key_and_labels(self, triples, traced):
-        """Cache key + per-item labels for the respect_deps path.
+        return self.composer.dag_key_and_labels(triples, traced)
 
-        Fine-grained layer-stage signatures re-key every step (kv-lens
-        drift through every attention stage), so the key coarsens to
-        the multiset of per-request *chain* signatures: (kind-bucketed
-        length via :meth:`ScheduleCache.signature`, chain stage
-        count).  Items are labelled ``(chain_sig, rank, chain_pos)``
-        — requests with equal signatures are interchangeable, ranked
-        by arrival order — which is what lets a cached round pattern
-        replay onto a signature-equivalent step.
-        """
-        cache = self.schedule_cache
-        owners = traced.owners
-        n_req = len(traced.tail_of)
-        chain_len = [0] * n_req
-        for o in owners:
-            chain_len[o] += 1
-        chain_sig = []
-        for rid in range(n_req):
-            it, r, kind = triples[traced.tail_of[rid]]
-            length = r.pos if kind == "decode" else it.tokens
-            chain_sig.append((cache.signature(kind, length),
-                              chain_len[rid]))
-        seen = Counter()
-        rank = []
-        for s in chain_sig:
-            rank.append(seen[s])
-            seen[s] += 1
-        labels = {}
-        pos_ctr = [0] * n_req
-        for i, (it, _, _) in enumerate(triples):
-            rid = owners[i]
-            labels[it.name] = (chain_sig[rid], rank[rid], pos_ctr[rid])
-            pos_ctr[rid] += 1
-        key = ("dag", self.policy.kind,
-               ScheduleCache.key_of(chain_sig))
-        return key, labels
-
-    def _dag_store(self, key, result, labels) -> None:
-        """Store a DAG composition as a label pattern.  Sliced items
-        record their slice tag alongside the parent stage's label so a
-        replay can re-cut a signature-equivalent step identically."""
-        def label_of(name):
-            parent, _, sub = name.partition("#")
-            return labels[parent] + (sub,)
-        try:
-            pattern = tuple(tuple(label_of(t[0].name) for t in rd)
-                            for rd in result)
-        except KeyError:           # defensive: unlabelled item
-            return
-        t_model = sum(self._dag_round_time(rd) for rd in result)
-        self.schedule_cache.store(key, pattern, t_model)
-
-    def _dag_apply_pattern(self, pattern, triples, labels):
-        """Replay a cached DAG pattern onto the current step.
-
-        Whole-stage labels map straight onto the current traced items;
-        labels carrying slice tags re-cut the current stage with the
-        cached slice count (exact accounting on *current* demands —
-        the replayed modelled time is honest, which is what the drift
-        re-validation inspects).  Any mismatch — a label the current
-        step lacks, a slice count the stage can no longer support —
-        returns None and the engine recomposes cold."""
-        by_label = {}
-        for trip in triples:
-            by_label[labels[trip[0].name]] = trip
-        # slice counts demanded per parent label
-        need: dict[tuple, int] = {}
-        for rd in pattern:
-            for lab in rd:
-                *parent, sub = lab
-                if sub.startswith("s"):
-                    try:
-                        k = int(sub.split("of", 1)[1])
-                    except (IndexError, ValueError):
-                        return None
-                    need[tuple(parent)] = k
-                elif sub not in ("", "join"):
-                    return None
-        sp = self.policy.slice_policy
-        expanded: dict[tuple, tuple] = {}
-        if need:
-            if sp is None:
-                return None
-            slicer = KernelSlicer(sp, self.device)
-            for parent, k in need.items():
-                trip = by_label.get(parent)
-                if trip is None:
-                    return None
-                it, r, kind = trip
-                parts = slicer.slice_item(it, k)
-                if len(parts) != k:
-                    return None  # stage can no longer support the cut
-                for j, part in enumerate(parts):
-                    expanded[parent + (f"s{j}of{k}",)] = (part, r, "frag")
-                expanded[parent + ("join",)] = (join_item(it), r, kind)
-        out = []
-        used = set()
-        for rd in pattern:
-            row = []
-            for lab in rd:
-                if lab in used:
-                    return None
-                used.add(lab)
-                *parent, sub = lab
-                trip = (expanded.get(lab) if sub
-                        else by_label.get(tuple(parent)))
-                if trip is None:
-                    return None
-                row.append(trip)
-            out.append(row)
-        # every current item must be covered exactly once
-        want = {labels[t[0].name] + ("",) for t in triples}
-        got = {(lab if lab[-1] == "" else tuple(lab[:-1]) + ("",))
-               for lab in used}
-        if got != want:
-            return None
-        return out
-
-    def _round_fits(self, rd) -> bool:
-        """Capacity re-check of one replayed round on actual demands
-        (solo rounds are always legal — oversized stages run alone)."""
-        if len(rd) <= 1:
-            return True
-        used = {d: 0.0 for d in self.device.caps}
-        for it, _, _ in rd:
-            for d, v in it.profile().demands.items():
-                if d in used:  # items may demand untracked dims
-                    used[d] += v
-        return all(used[d] <= self.device.cap(d) * (1 + 1e-9)
-                   for d in used)
-
-    def _replay_ok(self, key, rounds, time_of) -> bool:
-        """Stale-replay re-validation (ROADMAP item): a replayed
-        pattern whose modelled time drifts beyond
-        ``policy.replay_drift_tol`` from the stored composition's — or
-        that violates capacity on actual demands — is rejected and the
-        step recomposes cold."""
-        tol = self.policy.replay_drift_tol
-        if tol is None or tol <= 0:
-            return True            # legacy optimistic replay
-        cache = self.schedule_cache
-        t0 = cache.time_of(key)
-        t_now = sum(time_of(rd) for rd in rounds)
-        drifted = (t0 is not None and t0 > 0 and
-                   abs(t_now / t0 - 1.0) > tol)
-        if drifted or not all(self._round_fits(rd) for rd in rounds):
-            cache.replay_revalidations += 1
-            return False
-        return True
-
-    def _compose(self, items) -> list[list]:
-        """Group pending work items into execution rounds per policy.
-
-        Returns a list of rounds; each round is a list of
-        (TpuWorkItem, Request, kind) triples."""
-        by_name = {it.name: trip for trip in items for it in (trip[0],)}
-        if self.policy.kind == "fifo":
-            rounds = fifo_rounds([t[0] for t in items], self.device)
-            return [[by_name[it.name] for it in rd] for rd in rounds]
-        sigs = [self._signature(trip) for trip in items]
-        key = None
-        stale = False
-        if self.policy.cache:
-            key = (self.policy.kind, ScheduleCache.key_of(sigs))
-            pattern = self.schedule_cache.lookup(key)
-            if pattern is not None:
-                replay = self._apply_pattern(pattern, items, sigs)
-                if self._replay_ok(key, replay, self._flat_round_time):
-                    return replay
-                # Stale replay: recompose cold (the fresh composition
-                # re-stores under the same key).  Warm-start adaptation
-                # is skipped too — a one-signature-away pattern shares
-                # the rejected pattern's staleness and performs no
-                # capacity/drift re-validation of its own.
-                stale = True
-            if self.policy.warm_start and not stale:
-                warm = self.schedule_cache.near_miss(key)
-                if warm is not None:
-                    result = self._warm_adapt(warm, items, sigs)
-                    if result is not None:
-                        return self._cache_store(key, result, items, sigs)
-        profs = [t[0].profile() for t in items]
-        sched: Schedule = greedy_order_fast(profs, self.device)
-        if self.policy.kind == "refined":
-            if self.policy.refine_model in ("event", "round"):
-                # flat-order refinement under the core simulator,
-                # delta-evaluated (suffix re-simulation from cached
-                # admission checkpoints), then re-rounded by capacity
-                order, _, _ = refine_order(
-                    sched.order, self.device,
-                    model=self.policy.refine_model,
-                    budget=self.policy.refine_budget,
-                    neighborhood=self.policy.neighborhood,
-                    batch_size=(self.policy.refine_batch
-                                if self.policy.refine_backend == "batched"
-                                else None))
-            else:
-                # local search over the flat order, re-rounded by
-                # greedy capacity packing under the round cost model
-                def tfn(order_profs):
-                    its = [by_name[p.name][0] for p in order_profs]
-                    rds = fifo_rounds(its, self.device)
-                    return sum(round_time(r, self.device,
-                                          self.weights_bytes)
-                               for r in rds)
-
-                order, _, _ = refine_order(
-                    sched.order, self.device, time_fn=tfn,
-                    budget=self.policy.refine_budget,
-                    neighborhood=self.policy.neighborhood)
-            its = [by_name[p.name][0] for p in order]
-            rounds = fifo_rounds(its, self.device)
-            result = [[by_name[it.name] for it in rd] for rd in rounds]
-            return self._cache_store(key, result, items, sigs)
-        composed = [[by_name[p.name] for p in rd.kernels]
-                    for rd in sched.rounds]
-        # Cost-model guard: Algorithm 1 is profile-greedy; never accept
-        # a composition the round cost model says is worse than arrival
-        # order (the scheduler's own timing model is always available).
-        t_alg = sum(round_time([t[0] for t in rd], self.device,
-                               self.weights_bytes) for rd in composed)
-        fifo = fifo_rounds([t[0] for t in items], self.device)
-        t_fifo = sum(round_time(r, self.device, self.weights_bytes)
-                     for r in fifo)
-        if t_fifo < t_alg:
-            result = [[by_name[it.name] for it in rd] for rd in fifo]
-        else:
-            result = composed
-        return self._cache_store(key, result, items, sigs)
-
-    def _signature(self, trip) -> tuple[str, int]:
-        it, r, kind = trip
-        length = r.pos if kind == "decode" else it.tokens
-        return self.schedule_cache.signature(kind, length)
-
-    def _flat_round_time(self, rd) -> float:
-        return round_time([t[0] for t in rd], self.device,
-                          self.weights_bytes)
-
-    def _cache_store(self, key, result, items, sigs):
-        if key is not None:
-            name_sig = {trip[0].name: s for trip, s in zip(items, sigs)}
-            pattern = tuple(tuple(name_sig[t[0].name] for t in rd)
-                            for rd in result)
-            t_model = sum(self._flat_round_time(rd) for rd in result)
-            self.schedule_cache.store(key, pattern, t_model)
-        return result
-
-    def _apply_pattern(self, pattern, items, sigs):
-        """Replay a cached round pattern onto the current (signature-
-        equivalent) work items."""
-        groups: dict[tuple[str, int], deque] = {}
-        for trip, s in zip(items, sigs):
-            groups.setdefault(s, deque()).append(trip)
-        return [[groups[s].popleft() for s in rd] for rd in pattern]
-
-    def _warm_adapt(self, warm, items, sigs):
-        """Seed this step's composition from a near-miss cached one.
-
-        One request left: drop its signature's occurrence from the
-        cached pattern and replay.  One request joined: replay the
-        pattern on the matching items, then place the newcomer into
-        the round Algorithm 1's own scoring picks
-        (:func:`repro.core.fastscore.warm_start_insert`).  The result
-        still passes the fifo cost-model guard; returns None when the
-        adaptation cannot be applied.
-        """
-        pattern, added, removed = warm
-        pat = [list(rd) for rd in pattern]
-        if removed:
-            s = removed[0]
-            for rd in pat:
-                if s in rd:
-                    rd.remove(s)
-                    break
-            pat = [rd for rd in pat if rd]
-        groups: dict[tuple[str, int], deque] = {}
-        for trip, s in zip(items, sigs):
-            groups.setdefault(s, deque()).append(trip)
-        if added:
-            extra = groups[added[0]].popleft()
-        try:
-            result = [[groups[s].popleft() for s in rd] for rd in pat]
-        except (KeyError, IndexError):
-            return None  # stale pattern shape: fall back to recompute
-        if added:
-            ri = warm_start_insert(
-                [[t[0].profile() for t in rd] for rd in result],
-                extra[0].profile(), self.device)
-            if ri >= 0:
-                result[ri].append(extra)
-            else:
-                result.append([extra])
-        # Same guard as the cold path: never accept a composition the
-        # round cost model says is worse than arrival order.
-        t_warm = sum(round_time([t[0] for t in rd], self.device,
-                                self.weights_bytes) for rd in result)
-        fifo = fifo_rounds([t[0] for t in items], self.device)
-        t_fifo = sum(round_time(r, self.device, self.weights_bytes)
-                     for r in fifo)
-        if t_fifo < t_warm:
-            by_name = {t[0].name: t for t in items}
-            result = [[by_name[it.name] for it in rd] for rd in fifo]
-        else:
-            cache = self.schedule_cache
-            cache.warm_hits += 1
-            # Warm-start quality audit (deterministic sampling: the
-            # warm-hit counter crossing an integer multiple of 1/frac
-            # triggers a cold recompute; no RNG, so runs reproduce).
-            frac = self.policy.warm_audit_frac
-            if frac > 0 and (int(cache.warm_hits * frac) >
-                             int((cache.warm_hits - 1) * frac)):
-                sched = greedy_order_fast([t[0].profile() for t in items],
-                                          self.device)
-                nm = {t[0].name: t[0] for t in items}
-                t_cold = min(t_fifo, sum(
-                    round_time([nm[p.name] for p in rd.kernels],
-                               self.device, self.weights_bytes)
-                    for rd in sched.rounds))
-                cache.record_warm_regret(t_warm / max(t_cold, 1e-30) - 1.0)
-        return result
+    def _dag_round_time(self, rd) -> float:
+        return self.composer.dag_round_time(rd)
 
     # -- execution -------------------------------------------------------
     def submit(self, reqs: list[Request]) -> None:
@@ -927,12 +329,17 @@ class ServingEngine:
         On the ``respect_deps`` path a round may contain interior
         chain stages (kind ``"frag"``): they contribute to the round's
         modelled time but trigger no execution — the request's exact
-        forward pass runs once, at its chain's tail item."""
+        forward pass runs once, at its chain's tail item.  With
+        ``composition="incremental"`` the traced step composes through
+        the live frontier instead of the batch pipeline."""
         if self.policy.respect_deps:
             triples, traced = self._work_items_dag()
             if not triples:
                 return 0
-            rounds = self._compose_dag(triples, traced)
+            if self.live is not None:
+                rounds = self.live.compose_dag(triples, traced)
+            else:
+                rounds = self._compose_dag(triples, traced)
             time_of = self._dag_round_time
         else:
             items = self._work_items()

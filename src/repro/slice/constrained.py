@@ -43,7 +43,43 @@ from repro.graph.kernel_graph import KernelGraph
 from .graph import expand_nodes
 from .slicer import KernelSlicer, SlicePolicy, join_profile
 
-__all__ = ["SlicedSchedule", "greedy_order_slices", "refine_order_slices"]
+__all__ = ["SlicedSchedule", "frontier_solo_expander",
+           "greedy_order_slices", "refine_order_slices"]
+
+
+def frontier_solo_expander(slicer: KernelSlicer,
+                           make_slices: Callable | None = None,
+                           make_join: Callable | None = None):
+    """``on_solo`` hook for
+    :meth:`repro.graph.constrained.GreedyFrontier.insert_chain`:
+    slice-aware live joins (PR 7).
+
+    When a joining chain's stage fits no round of the live
+    composition, the frontier asks this hook before opening a solo
+    round — the live counterpart of the lazy expansion trigger in
+    :func:`greedy_order_slices` (there, a stage is cut when the batch
+    greedy lands it in a solo round; here, when the live placement
+    scan finds no fitting peer round).  The policy decision is the
+    slicer's (:meth:`~repro.slice.slicer.KernelSlicer.slice_count`);
+    ``make_slices(prof, k)`` / ``make_join(prof)`` override the
+    expansion mechanics exactly as in :func:`greedy_order_slices` —
+    the serving engine passes closures that also cut the backing
+    work items so the composed rounds stay executable.  Returns
+    ``(slices, join)`` or ``None`` (stage stays whole)."""
+    if make_slices is None:
+        make_slices = slicer.slice_profile
+    if make_join is None:
+        make_join = join_profile
+
+    def on_solo(prof: KernelProfile):
+        if "#" in prof.name:
+            return None          # slices and joins are terminal
+        k = slicer.slice_count(prof)
+        if k <= 1:
+            return None
+        return list(make_slices(prof, k)), make_join(prof)
+
+    return on_solo
 
 
 class SlicedSchedule:
@@ -92,6 +128,7 @@ def greedy_order_slices(
                           Sequence[KernelProfile]] | None = None,
     make_join: Callable[[KernelProfile], KernelProfile] | None = None,
     max_passes: int = 8,
+    frontier=None,
 ) -> SlicedSchedule:
     """Ready-set Algorithm 1 with lazy Kernelet-style slicing.
 
@@ -102,6 +139,12 @@ def greedy_order_slices(
     :class:`~repro.core.tpu.TpuWorkItem` so rounds stay executable;
     the *decision* (which stage, how many pieces) always comes from
     the policy via :class:`~repro.slice.slicer.KernelSlicer`.
+
+    ``frontier`` threads a
+    :class:`repro.graph.constrained.GreedyFrontier` sink through to
+    the greedy passes; because each pass resets it, on return it holds
+    the *final* pass's composition — the one this function's schedule
+    reports — ready for live extension.
     """
     ks: list[KernelProfile] = list(kernels)
     es: set = {(u, v) for u, v in edges}
@@ -114,7 +157,8 @@ def greedy_order_slices(
         make_join = join_profile
     passes = 0
     while True:
-        sched = greedy_order_dag(ks, device, edges=es)
+        sched = greedy_order_dag(ks, device, edges=es,
+                                 frontier=frontier)
         if slicer is None or passes >= max_passes:
             break
         pos = {id(k): i for i, k in enumerate(ks)}

@@ -94,5 +94,6 @@ def test_architecture_names_cover_scheduling_packages():
                 "repro.graph.constrained", "repro.graph.streams",
                 "repro.graph.delta", "repro.slice.slicer",
                 "repro.slice.graph", "repro.slice.constrained",
-                "repro.serve.engine"):
+                "repro.serve.engine", "repro.serve.composer",
+                "repro.serve.cache", "repro.serve.live"):
         assert mod in text, f"architecture.md no longer names {mod}"

@@ -1,0 +1,289 @@
+"""Live incremental composition (PR 7): GreedyFrontier mechanics and
+the ``SchedulerPolicy.composition="incremental"`` serving path.
+
+* the frontier sink on ``greedy_order_dag`` records exactly the
+  rounds the batch greedy returns;
+* ``insert_chain`` places a chain's stages in strictly increasing
+  rounds (the precedence invariant), ``remove`` retires them —
+  including a leave-of-just-joined — and ``refresh`` swaps to drifted
+  profile objects in place;
+* engine level: ``composition="incremental"`` generates bit-identical
+  tokens to ``"batch"`` across all three traced archs under join/leave
+  churn, with slicing, with a forced drift-backstop rebuild, and in
+  the untriggered (no-churn) case; the new counters surface in
+  ``ScheduleCache.stats()``.
+"""
+
+import random
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.tpu import (decode_profile, make_serving_device,
+                            prefill_profile)
+from repro.graph.constrained import GreedyFrontier, greedy_order_dag
+from repro.models import transformer as T
+from repro.serve import Request, SchedulerPolicy, ServingEngine
+from repro.slice import SlicePolicy
+
+_TPU = make_serving_device()
+ARCHS = ("qwen1.5-0.5b", "mixtral-8x7b", "deepseek-v2-236b")
+
+
+# --------------------------------------------------------------------------
+# frontier mechanics (no model, no engine)
+# --------------------------------------------------------------------------
+
+def _chain_profiles(rng: random.Random, tag: str, n: int):
+    """One request-like chain: a prefill head and decode-ish stages."""
+    out = []
+    for i in range(n):
+        if i == 0 and rng.random() < 0.5:
+            it = prefill_profile(f"{tag}:p{i}", n_params=7e9,
+                                 seq_len=rng.choice([128, 256, 512]),
+                                 kv_bytes_per_token=131072)
+        else:
+            it = decode_profile(f"{tag}:d{i}", n_params=7e9,
+                                kv_len=rng.randint(1, 4096),
+                                kv_bytes_per_token=131072)
+        out.append(it.profile())
+    return out
+
+
+def _chain_workload(rng: random.Random, n_chains: int):
+    """Chain-structured DAG (the traced-serving shape: edges only
+    within one chain)."""
+    profs, edges = [], set()
+    for c in range(n_chains):
+        chain = _chain_profiles(rng, f"r{c}", rng.randint(1, 4))
+        base = len(profs)
+        profs.extend(chain)
+        edges |= {(base + i, base + i + 1)
+                  for i in range(len(chain) - 1)}
+    return profs, edges
+
+
+def _round_index_of(frontier: GreedyFrontier) -> dict:
+    return {name: i for i, rd in enumerate(frontier.round_names())
+            for name in rd}
+
+
+def _assert_chain_order(frontier, chains):
+    at = _round_index_of(frontier)
+    for chain in chains:
+        idxs = [at[p.name] for p in chain]
+        assert idxs == sorted(idxs) and len(set(idxs)) == len(idxs), \
+            (chain[0].name, idxs)
+
+
+def test_frontier_sink_matches_greedy_rounds():
+    for seed in range(8):
+        rng = random.Random(seed)
+        profs, edges = _chain_workload(rng, rng.randint(2, 6))
+        f = GreedyFrontier(_TPU)
+        sched = greedy_order_dag(profs, _TPU, edges=edges, frontier=f)
+        assert f.round_names() == [rd.names for rd in sched.rounds]
+        assert [p.name for p in f.order()] == [p.name
+                                               for p in sched.order]
+
+
+def test_frontier_insert_chain_keeps_precedence():
+    for seed in range(6):
+        rng = random.Random(100 + seed)
+        profs, edges = _chain_workload(rng, 3)
+        f = GreedyFrontier(_TPU)
+        greedy_order_dag(profs, _TPU, edges=edges, frontier=f)
+        new = _chain_profiles(rng, "rx", 3)
+        f.insert_chain(new)
+        names = {p.name for p in f.order()}
+        assert names == {p.name for p in profs} | {p.name for p in new}
+        _assert_chain_order(f, [new])
+
+
+def test_frontier_remove_and_leave_of_just_joined():
+    rng = random.Random(7)
+    profs, edges = _chain_workload(rng, 3)
+    f = GreedyFrontier(_TPU)
+    greedy_order_dag(profs, _TPU, edges=edges, frontier=f)
+    before = f.round_names()
+    new = _chain_profiles(rng, "rx", 3)
+    f.insert_chain(new)
+    # leave-of-just-joined: retiring the chain restores the previous
+    # membership; rounds the insert had extended re-fold their combs
+    f.remove({p.name for p in new})
+    assert {p.name for p in f.order()} == {p.name for p in profs}
+    assert [rd for rd in f.round_names() if rd] == \
+        [rd for rd in before if rd]
+    # and the frontier is still extendable afterwards
+    f.insert_chain(_chain_profiles(rng, "ry", 2))
+    _assert_chain_order(f, [])
+
+
+def test_frontier_refresh_swaps_drifted_profiles():
+    rng = random.Random(11)
+    profs, edges = _chain_workload(rng, 3)
+    f = GreedyFrontier(_TPU)
+    greedy_order_dag(profs, _TPU, edges=edges, frontier=f)
+    drifted = {}
+    for p in profs:
+        if p.name.split(":")[1].startswith("d"):
+            # the serving drift: decode kv one step longer
+            it = decode_profile(p.name, n_params=7e9, kv_len=4097,
+                                kv_bytes_per_token=131072)
+            drifted[p.name] = it.profile()
+    f.refresh(drifted)
+    by_name = {p.name: p for p in f.order()}
+    for name, p in drifted.items():
+        assert by_name[name] is p
+    f.insert_chain(_chain_profiles(rng, "rz", 2))  # still scoreable
+    assert len(f.order()) == len(profs) + 2
+
+
+# --------------------------------------------------------------------------
+# serving: incremental == batch, bit for bit
+# --------------------------------------------------------------------------
+
+_PARAMS_CACHE: dict = {}
+
+
+def _engine(arch, policy, device=None, max_len=32):
+    cfg = get_config(arch, "smoke")
+    if arch not in _PARAMS_CACHE:
+        _PARAMS_CACHE[arch] = T.init(jax.random.PRNGKey(0), cfg)
+    return ServingEngine(cfg, _PARAMS_CACHE[arch], max_len=max_len,
+                         policy=policy, device=device)
+
+
+def _churn_run(arch, composition, device=None, slice_policy=None,
+               drift_tol=0.05):
+    """Churny serving run: staggered arrivals with different lifetimes
+    so requests join and leave the mix at different steps."""
+    policy = SchedulerPolicy(kind="symbiotic", respect_deps=True,
+                             composition=composition,
+                             slice_policy=slice_policy,
+                             replay_drift_tol=drift_tol)
+    eng = _engine(arch, policy, device=device)
+    rng = np.random.default_rng(0)
+    eng.submit([Request(i, rng.integers(0, 128, size=4),
+                        max_new_tokens=3 + i) for i in range(2)])
+    late = [(2, [Request(10, rng.integers(0, 128, size=4),
+                         max_new_tokens=2)]),
+            (4, [Request(11, rng.integers(0, 128, size=4),
+                         max_new_tokens=3)])]
+    return eng.run(arrivals=late)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_incremental_tokens_bit_identical_under_churn(arch):
+    s_batch = _churn_run(arch, "batch")
+    s_inc = _churn_run(arch, "incremental")
+    assert s_inc["outputs"] == s_batch["outputs"]
+    stats = s_inc["schedule_cache"]
+    # churn exercised the frontier: phase changes and arrivals join,
+    # finished requests leave
+    assert stats["incremental_joins"] >= 1
+    assert stats["incremental_leaves"] >= 1
+
+
+def test_incremental_leave_of_just_joined_request():
+    """A request that joins and finishes almost immediately (one
+    decode step after its prefill) must retire cleanly from the live
+    frontier."""
+    def run(composition):
+        policy = SchedulerPolicy(kind="symbiotic", respect_deps=True,
+                                 composition=composition)
+        eng = _engine("qwen1.5-0.5b", policy)
+        rng = np.random.default_rng(1)
+        eng.submit([Request(i, rng.integers(0, 128, size=4),
+                            max_new_tokens=6) for i in range(2)])
+        blip = [(2, [Request(9, rng.integers(0, 128, size=4),
+                             max_new_tokens=1)])]
+        return eng.run(arrivals=blip)
+
+    s_batch = run("batch")
+    s_inc = run("incremental")
+    assert s_inc["outputs"] == s_batch["outputs"]
+    assert len(s_inc["outputs"][9]) >= 1
+
+
+def test_untriggered_incremental_matches_batch():
+    """No churn at all (one cohort, equal lifetimes): the incremental
+    path must be bit-identical to batch — the property pin that the
+    frontier machinery is invisible when nothing exercises it."""
+    def run(composition):
+        policy = SchedulerPolicy(kind="symbiotic", respect_deps=True,
+                                 composition=composition)
+        eng = _engine("qwen1.5-0.5b", policy)
+        rng = np.random.default_rng(2)
+        eng.submit([Request(i, rng.integers(0, 128, size=4),
+                            max_new_tokens=4) for i in range(3)])
+        return eng.run()
+
+    s_batch = run("batch")
+    s_inc = run("incremental")
+    assert s_inc["outputs"] == s_batch["outputs"]
+    assert s_inc["total_new_tokens"] == s_batch["total_new_tokens"]
+
+
+def test_incremental_drift_backstop_rebuilds():
+    """With a hair-trigger drift tolerance the kv growth between
+    steps forces cold rebuilds — counted, and still bit-identical."""
+    s_batch = _churn_run("qwen1.5-0.5b", "batch")
+    s_inc = _churn_run("qwen1.5-0.5b", "incremental", drift_tol=1e-9)
+    assert s_inc["outputs"] == s_batch["outputs"]
+    assert s_inc["schedule_cache"]["frontier_rebuilds"] >= 1
+
+
+def test_incremental_with_slicing_tokens_identical():
+    """Slice-aware live joins (``frontier_solo_expander``): a shrunken
+    slot budget makes prefill stages oversized so cutting genuinely
+    triggers on both paths; tokens stay bit-identical."""
+    dev = make_serving_device(token_budget=6)
+    s_batch = _churn_run("qwen1.5-0.5b", "batch", device=dev,
+                         slice_policy=SlicePolicy())
+    s_inc = _churn_run("qwen1.5-0.5b", "incremental", device=dev,
+                       slice_policy=SlicePolicy())
+    assert s_inc["outputs"] == s_batch["outputs"]
+
+
+def test_incremental_fifo_kind_passes_through():
+    """kind="fifo" has no composition to keep live: the incremental
+    engine serves dep-aware arrival order exactly like batch."""
+    def run(composition):
+        policy = SchedulerPolicy(kind="fifo", respect_deps=True,
+                                 composition=composition)
+        eng = _engine("qwen1.5-0.5b", policy)
+        rng = np.random.default_rng(3)
+        eng.submit([Request(i, rng.integers(0, 128, size=4),
+                            max_new_tokens=3) for i in range(2)])
+        return eng.run()
+
+    s_batch = run("batch")
+    s_inc = run("incremental")
+    assert s_inc["outputs"] == s_batch["outputs"]
+    assert s_inc["modelled_time_s"] == pytest.approx(
+        s_batch["modelled_time_s"])
+
+
+def test_gated_guard_reuses_checkpoints_across_candidates():
+    """PR 7 satellite: with ``dag_guard="gated"`` the per-step guard
+    delta-evaluates same-kernel-set candidates against the first full
+    simulation's checkpoints instead of re-simulating from scratch;
+    the saved full-sim equivalents surface in stats, and tokens are
+    unaffected."""
+    def run(guard):
+        policy = SchedulerPolicy(kind="symbiotic", respect_deps=True,
+                                 dag_guard=guard, cache=False)
+        eng = _engine("qwen1.5-0.5b", policy)
+        rng = np.random.default_rng(4)
+        eng.submit([Request(i, rng.integers(0, 128, size=4),
+                            max_new_tokens=3) for i in range(3)])
+        return eng.run()
+
+    s_rounds = run("rounds")
+    s_gated = run("gated")
+    assert s_gated["outputs"] == s_rounds["outputs"]
+    assert s_gated["schedule_cache"]["gated_sims_saved"] > 0.0
+    assert s_rounds["schedule_cache"]["gated_sims_saved"] == 0.0

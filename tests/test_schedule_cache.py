@@ -1,6 +1,6 @@
 """Unit tests for the serving ScheduleCache (no model, no jax device
-work): signatures, key multisets, pattern replay, LRU bound and
-refresh accounting, near-miss warm starts."""
+work): signatures, key multisets, namespaced keys, pattern replay,
+LRU bound and refresh accounting, near-miss warm starts."""
 
 from repro.serve import ScheduleCache
 
@@ -22,7 +22,8 @@ def test_key_is_order_invariant_multiset():
 
 def test_lookup_store_and_hit_accounting():
     c = ScheduleCache()
-    key = ("symbiotic", ScheduleCache.key_of([("d", 0), ("p", 8)]))
+    key = ("flat", "symbiotic",
+           ScheduleCache.key_of([("d", 0), ("p", 8)]))
     assert c.lookup(key) is None
     pattern = ((("p", 8), ("d", 0)),)
     c.store(key, pattern)
@@ -35,9 +36,10 @@ def test_lookup_store_and_hit_accounting():
 def test_lru_eviction_bound():
     c = ScheduleCache(max_entries=4)
     for i in range(10):
-        c.store(("k", i), ())
+        c.store(("flat", "k", i), ())
     assert len(c._store) == 4
-    assert ("k", 9) in c._store and ("k", 5) not in c._store
+    assert (("flat", "k", 9) in c._store and
+            ("flat", "k", 5) not in c._store)
 
 
 def test_restore_refreshes_lru_position():
@@ -45,18 +47,18 @@ def test_restore_refreshes_lru_position():
     without move_to_end a refreshed entry kept its stale position and
     was evicted as if it were never touched."""
     c = ScheduleCache(max_entries=3)
-    c.store(("k", 1), ())
-    c.store(("k", 2), ())
-    c.store(("k", 3), ())
-    c.store(("k", 1), ((("d", 0),),))   # refresh oldest entry
-    c.store(("k", 4), ())               # evicts the true LRU: ("k", 2)
-    assert ("k", 1) in c._store
-    assert ("k", 2) not in c._store
-    assert c._store[("k", 1)] == ((("d", 0),),)
+    c.store(("flat", "k", 1), ())
+    c.store(("flat", "k", 2), ())
+    c.store(("flat", "k", 3), ())
+    c.store(("flat", "k", 1), ((("d", 0),),))  # refresh oldest entry
+    c.store(("flat", "k", 4), ())   # evicts the true LRU: ("k", 2)
+    assert ("flat", "k", 1) in c._store
+    assert ("flat", "k", 2) not in c._store
+    assert c._store[("flat", "k", 1)] == ((("d", 0),),)
 
 
 def _key(kind, sigs):
-    return (kind, ScheduleCache.key_of(list(sigs)))
+    return ("flat", kind, ScheduleCache.key_of(list(sigs)))
 
 
 def test_near_miss_one_joined():
@@ -118,18 +120,18 @@ def test_store_records_model_time_for_drift_checks():
     composition's modelled time against the one recorded at store
     time; patterns stored without a time opt out (None)."""
     c = ScheduleCache()
-    c.store(("k", 1), (), 0.125)
-    c.store(("k", 2), ())
-    assert c.time_of(("k", 1)) == 0.125
-    assert c.time_of(("k", 2)) is None
-    assert c.time_of(("k", 3)) is None      # never stored
+    c.store(("flat", "k", 1), (), 0.125)
+    c.store(("flat", "k", 2), ())
+    assert c.time_of(("flat", "k", 1)) == 0.125
+    assert c.time_of(("flat", "k", 2)) is None
+    assert c.time_of(("flat", "k", 3)) is None  # never stored
     # eviction drops the recorded time alongside the pattern
     small = ScheduleCache(max_entries=2)
-    small.store(("k", 1), (), 1.0)
-    small.store(("k", 2), (), 2.0)
-    small.store(("k", 3), (), 3.0)
-    assert small.time_of(("k", 1)) is None
-    assert small.time_of(("k", 3)) == 3.0
+    small.store(("flat", "k", 1), (), 1.0)
+    small.store(("flat", "k", 2), (), 2.0)
+    small.store(("flat", "k", 3), (), 3.0)
+    assert small.time_of(("flat", "k", 1)) is None
+    assert small.time_of(("flat", "k", 3)) == 3.0
 
 
 def test_new_counters_surface_in_stats():
@@ -150,3 +152,52 @@ def test_warm_audit_sampling_is_deterministic():
     assert [s for s in range(1, 9) if sampled(s, 0.25)] == [4, 8]
     assert [s for s in range(1, 5) if sampled(s, 1.0)] == [1, 2, 3, 4]
     assert [s for s in range(1, 9) if sampled(s, 0.0)] == []
+
+
+def test_keys_are_namespaced():
+    """PR 7: every key names its path — flat or dag — so a traced step
+    can never consult a flat-signature pattern (the PR 3 cache-bypass
+    wart, now structurally impossible)."""
+    import pytest
+
+    c = ScheduleCache()
+    with pytest.raises(AssertionError):
+        c.store(("symbiotic", (("d", 0),)), ())     # legacy 2-tuple
+    with pytest.raises(AssertionError):
+        c.lookup(("symbiotic", (("d", 0),)))
+    key = ("flat", "symbiotic", (("d", 0),))
+    c.store(key, ())
+    assert c.lookup(key, namespace="flat") == ()
+    with pytest.raises(AssertionError):
+        c.lookup(key, namespace="dag")              # wrong path
+    dkey = ("dag", "symbiotic", ((("d", 0), 3),))
+    c.store(dkey, ())
+    assert c.lookup(dkey, namespace="dag") == ()
+    with pytest.raises(AssertionError):
+        c.near_miss(dkey)       # warm adaptation is flat-only
+
+
+def test_near_miss_never_crosses_namespaces():
+    c = ScheduleCache()
+    # a dag entry whose (kind, len±1) shape would match the flat scan
+    c.store(("dag", "symbiotic", (("d", 0),)), ())
+    assert c.near_miss(("flat", "symbiotic",
+                        (("d", 0), ("d", 0)))) is None
+
+
+def test_incremental_counters_surface_in_stats():
+    c = ScheduleCache()
+    s = c.stats()
+    assert s["incremental_joins"] == 0
+    assert s["incremental_leaves"] == 0
+    assert s["frontier_rebuilds"] == 0
+    assert s["gated_sims_saved"] == 0.0
+    c.incremental_joins += 3
+    c.incremental_leaves += 2
+    c.frontier_rebuilds += 1
+    c.gated_sims_saved += 0.75
+    s = c.stats()
+    assert s["incremental_joins"] == 3
+    assert s["incremental_leaves"] == 2
+    assert s["frontier_rebuilds"] == 1
+    assert abs(s["gated_sims_saved"] - 0.75) < 1e-12
