@@ -70,11 +70,62 @@ _BATCHED_FLOOR = 2.0
 #: rebuild-every-step without flapping on runner noise)
 _CHURN_FLOOR = 1.6
 
+#: ceiling on the tracing-enabled / tracing-disabled wall-time ratio
+#: of a compose + gated-simulate pass (PR 8: every instrumentation
+#: site is a ``trace is not None`` guard plus a list append, so a
+#: live :class:`repro.obs.ScheduleTrace` must stay within 10% of the
+#: null recorder — a hot-path emission that got expensive shows up
+#: here before it shows up in serving step times)
+_TRACE_OVERHEAD = 1.10
+
 #: the PR 7 package split re-exports the historical flat import
 #: surface; a rename that silently drops one of these breaks every
 #: external consumer, so the guard imports them by name
 _SERVE_SURFACE = ("Request", "ScheduleCache", "SchedulerPolicy",
                   "ServingEngine", "Signature")
+
+
+def trace_overhead_ratio(*, repeats: int = 5, inner: int = 4) -> dict:
+    """Wall-time ratio of a traced vs untraced compose + simulate
+    pass: the ready-set greedy over a traced qwen arch on the x4
+    serving device, then :class:`repro.graph.streams.DagEventSimulator`
+    with a live :class:`repro.obs.ScheduleTrace` vs ``trace=None``.
+
+    Interleaved best-of-``repeats`` (each repeat times both sides
+    back-to-back, ``inner`` passes per sample) so slow drift on a
+    shared runner hits both sides equally."""
+    import time
+
+    from repro.configs import get_config
+    from repro.core.tpu import make_serving_device
+    from repro.graph.constrained import greedy_order_dag
+    from repro.graph.kernel_graph import trace_arch
+    from repro.graph.streams import DagEventSimulator
+    from repro.obs import ScheduleTrace
+
+    cfg = get_config("qwen1.5-0.5b", "full")
+    traced = trace_arch(cfg, [("prefill", 64)] * 3
+                        + [("decode", 128)] * 3, max_stages=48)
+    g = traced.graph
+    device = make_serving_device(n_units=4)
+    eids = g.edges_by_id()
+
+    def once(with_trace: bool) -> float:
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            sched = greedy_order_dag(g.kernels, device, edges=g.edges)
+            tr = ScheduleTrace() if with_trace else None
+            DagEventSimulator(device, eids).simulate(sched.order,
+                                                     trace=tr)
+        return time.perf_counter() - t0
+
+    once(False)                       # warm caches on neither side
+    t_off = t_on = float("inf")
+    for _ in range(max(repeats, 1)):
+        t_off = min(t_off, once(False))
+        t_on = min(t_on, once(True))
+    return {"wall_off_s": t_off, "wall_on_s": t_on,
+            "ratio": t_on / max(t_off, 1e-12)}
 
 
 def _surface_regressions() -> list[str]:
@@ -136,6 +187,12 @@ def main(argv=None) -> int:
                          "n_live cell (0 disables; re-runs "
                          "benchmarks/serving.py churn_compose_bench "
                          "fresh)")
+    ap.add_argument("--trace-overhead", type=float,
+                    default=_TRACE_OVERHEAD,
+                    help="ceiling on the traced/untraced wall-time "
+                         "ratio of a compose + gated-simulate pass "
+                         "(0 disables; interleaved best-of-k on this "
+                         "box, no committed baseline needed)")
     ap.add_argument("--quick", action="store_true",
                     help="skip the slow oracle/full baselines entirely "
                          "(fresh run measures only the guarded cells)")
@@ -181,6 +238,15 @@ def main(argv=None) -> int:
                 f"n_live={top['n_live']}: "
                 f"{top['compose_speedup']:.2f}x < floor "
                 f"{args.churn_floor:.2f}x")
+    if args.trace_overhead > 0:
+        tr = trace_overhead_ratio()
+        if tr["ratio"] > args.trace_overhead:
+            regressions.append(
+                f"schedule-trace overhead: traced compose+simulate "
+                f"{tr['ratio']:.3f}x untraced "
+                f"({tr['wall_on_s'] * 1e3:.1f} ms vs "
+                f"{tr['wall_off_s'] * 1e3:.1f} ms) > ceiling "
+                f"{args.trace_overhead:.2f}x")
     if regressions:
         print("\nREGRESSION: construction wall time exceeded "
               f"{args.threshold:.2f}x the committed baseline:")

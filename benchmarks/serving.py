@@ -167,17 +167,34 @@ def simulate_load(kind: str, policy: str, *, seed: int = 3,
             "tokens": tokens, "tok_per_s": tokens / max(t_total, 1e-12)}
 
 
+def _print_phases(phases: dict, print_fn) -> None:
+    """One human-readable line per engine phase (the PR 8 profiling
+    hooks): calls, total wall seconds, mean per call."""
+    for name, row in phases.items():
+        if row["calls"] == 0:
+            continue
+        print_fn(f"  phase {name:<8} {row['calls']:>4} calls, "
+                 f"{row['total_s'] * 1e3:8.2f} ms total, "
+                 f"{row['mean_s'] * 1e6:8.1f} us/call")
+
+
 def engine_cache_stats(*, n_requests: int = 6, max_new_tokens: int = 24,
                        print_fn=print) -> dict:
     """ScheduleCache hit-rate of the real engine on a decode-heavy
     steady state (smoke-size model, CPU greedy decode), with staggered
     arrivals so cache *near-misses* (one request joining the mix)
-    exercise the warm-start path."""
+    exercise the warm-start path.  Also prints the per-phase wall-clock
+    breakdown (PR 8 profiling hooks) and runs a short churny
+    ``composition="incremental"`` engine so the PR 7 churn counters
+    (``incremental_joins`` / ``incremental_leaves`` /
+    ``frontier_rebuilds``) show up in the human-readable summary, not
+    just the JSON."""
     import jax
     import numpy as np
 
     from repro.configs import get_config
     from repro.models import transformer as T
+    from repro.obs import MetricsRegistry
     from repro.serve import Request, SchedulerPolicy, ServingEngine
 
     cfg = get_config("qwen1.5-0.5b", "smoke")
@@ -185,7 +202,8 @@ def engine_cache_stats(*, n_requests: int = 6, max_new_tokens: int = 24,
     rng = np.random.default_rng(0)
     eng = ServingEngine(cfg, params, max_len=64,
                         policy=SchedulerPolicy(kind="symbiotic",
-                                               warm_audit_frac=1.0))
+                                               warm_audit_frac=1.0),
+                        metrics=MetricsRegistry())
     eng.submit([Request(i, rng.integers(0, 512, size=4),
                         max_new_tokens=max_new_tokens)
                 for i in range(n_requests)])
@@ -203,6 +221,35 @@ def engine_cache_stats(*, n_requests: int = 6, max_new_tokens: int = 24,
              f"hit-rate {cache['hit_rate']:.1%}) over "
              f"{stats['rounds']} rounds, "
              f"{stats['total_new_tokens']} tokens")
+    _print_phases(stats["phases"], print_fn)
+    cache["phases"] = stats["phases"]
+
+    # churny incremental-composition run: the PR 7 counters are only
+    # live on the respect_deps + composition="incremental" path
+    inc = ServingEngine(cfg, params, max_len=64,
+                        policy=SchedulerPolicy(
+                            kind="symbiotic", respect_deps=True,
+                            composition="incremental"),
+                        metrics=MetricsRegistry())
+    inc.submit([Request(i, rng.integers(0, 512, size=4),
+                        max_new_tokens=3 + i) for i in range(3)])
+    churny = [(2, [Request(110, rng.integers(0, 512, size=4),
+                           max_new_tokens=2)]),
+              (4, [Request(111, rng.integers(0, 512, size=4),
+                           max_new_tokens=3)])]
+    s_inc = inc.run(arrivals=churny)
+    c_inc = s_inc["schedule_cache"]
+    print_fn(f"incremental composition (churny): "
+             f"{c_inc['incremental_joins']} joins, "
+             f"{c_inc['incremental_leaves']} leaves, "
+             f"{c_inc['frontier_rebuilds']} frontier rebuilds over "
+             f"{s_inc['rounds']} rounds")
+    _print_phases(s_inc["phases"], print_fn)
+    cache["incremental"] = {
+        "incremental_joins": c_inc["incremental_joins"],
+        "incremental_leaves": c_inc["incremental_leaves"],
+        "frontier_rebuilds": c_inc["frontier_rebuilds"],
+        "phases": s_inc["phases"]}
     return cache
 
 

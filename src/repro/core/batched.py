@@ -53,6 +53,7 @@ free (NumPy only) so tier-1 tests never require a device.
 
 from __future__ import annotations
 
+from time import perf_counter
 from typing import Callable, Sequence
 
 import numpy as np
@@ -747,6 +748,7 @@ def refine_order_batched(
     legal: Callable[[Sequence[KernelProfile]], bool] | None = None,
     verify_k: int = 8,
     rescore: bool | None = None,
+    metrics=None,
 ) -> tuple[list[KernelProfile], float, int]:
     """Batched counterpart of :func:`repro.core.refine.refine_order`:
     generates the move neighborhood as ``(B, n)`` candidate batches,
@@ -945,4 +947,9 @@ def refine_order_batched(
                                 np.stack(rem_rows), rem_cps)
                 else:
                     tried += 1
+    if metrics is not None:
+        metrics.counter("refine_evals").inc(evals)
+        metrics.counter("refine_cost").inc(cost)
+        metrics.histogram("refine_score_s").observe(
+            perf_counter() - t_wall)
     return best, best_t, evals

@@ -76,6 +76,7 @@ is the precedence-respecting counterpart of :func:`refine_order`.
 from __future__ import annotations
 
 import math
+from time import perf_counter
 from typing import Callable, Sequence
 
 from .fastscore import greedy_order_fast
@@ -129,7 +130,7 @@ class _FastRoundSim:
 
     def simulate(self, order: Sequence[KernelProfile],
                  start_pos: int = 0, head_blocks: int | None = None,
-                 t0: float = 0.0, record: bool = False
+                 t0: float = 0.0, record: bool = False, trace=None
                  ) -> tuple[float, list[RoundCheckpoint]]:
         dev = self.device
         dims_n = len(self._dims)
@@ -146,6 +147,7 @@ class _FastRoundSim:
         ckpts: list[RoundCheckpoint] = []
         head = 0
         n_pend = len(pending)
+        r_idx = 0
         while head < n_pend:
             if record:
                 e = pending[head]
@@ -153,6 +155,7 @@ class _FastRoundSim:
                                              time=total))
             used = [0.0] * dims_n
             blocks, inst, mem = 0, 0.0, 0.0
+            members: list = []
             while head < n_pend:
                 e = pending[head]
                 k, nb, _, dem, inst_b, mem_b = e
@@ -173,6 +176,8 @@ class _FastRoundSim:
                 blocks += fit
                 inst += inst_b * fit
                 mem += mem_b * fit
+                if trace is not None:
+                    members.append((k.name, fit))
                 e[1] -= fit
                 if e[1] == 0:
                     head += 1
@@ -181,8 +186,17 @@ class _FastRoundSim:
             occ = used[self._sat_idx] if self._sat_idx >= 0 else 0.0
             eff_c = max(self._eff(occ, dev.sat_compute), eps)
             eff_m = max(self._eff(occ, dev.sat_memory), eps)
+            r_start = total
             total += max(inst / (dev.compute_rate * eff_c),
                          mem / (dev.mem_bw * eff_m))
+            if trace is not None:
+                for name, fit_ in members:
+                    trace.span(0, name, r_start, total, blocks=fit_,
+                               cat="round-member")
+                trace.instant(f"round {r_idx}", total, unit=0,
+                              cat="round")
+                trace.add_busy(0, total - r_start)
+            r_idx += 1
         return total, ckpts
 
 
@@ -253,7 +267,7 @@ class _FastEventSim:
 
     def simulate(self, order: Sequence[KernelProfile],
                  start_state: EventCheckpoint | None = None,
-                 record: bool = False
+                 record: bool = False, trace=None
                  ) -> tuple[float, list[EventCheckpoint]]:
         dev = self.device
         dims_n = len(self._dims)
@@ -392,17 +406,24 @@ class _FastEventSim:
                 eff_m = max(self._eff(occ, dev.sat_memory), eps)
                 t1 = max(inst_b / (dev.compute_rate * eff_c),
                          mem_b / (dev.mem_bw * eff_m))
-                for _ in range(math.ceil(nb / n_units)):
+                for p in range(math.ceil(nb / n_units)):
                     t += t1
+                    if trace is not None:
+                        for ui in range(min(n_units, nb - p * n_units)):
+                            trace.span(ui, e[0].name, t - t1, t,
+                                       blocks=1, cat="solo")
+                            trace.add_busy(ui, t1)
                 try_admit()
                 continue
             dt = min([c[2] / u[3] for u in units if u[2] for c in u[2]])
             t += dt
             freed = False
-            for u in units:
+            for ui, u in enumerate(units):
                 cohorts = u[2]
                 if not cohorts:
                     continue
+                if trace is not None:
+                    trace.add_busy(ui, dt)
                 lam = u[3]
                 done = []
                 for c in cohorts:
@@ -419,6 +440,9 @@ class _FastEventSim:
                             used[di] -= dem[di] * nb
                         u[1] -= nb
                         n_res_total -= nb
+                        if trace is not None:
+                            trace.span(ui, c[0].name, c[3], t,
+                                       blocks=nb)
                     self._rate(u)
             if freed:
                 try_admit()
@@ -463,11 +487,14 @@ class DeltaEvaluator:
         self._ckpts: list = []
         self._total = 0.0
 
-    def rebase(self, order: Sequence[KernelProfile]) -> float:
-        """Full simulation of ``order``; caches its checkpoints."""
+    def rebase(self, order: Sequence[KernelProfile],
+               trace=None) -> float:
+        """Full simulation of ``order``; caches its checkpoints.
+        ``trace`` forwards to the fast simulator's recorder hook."""
         self._base = list(order)
         self._total, self._ckpts = self.sim.simulate(self._base,
-                                                     record=True)
+                                                     record=True,
+                                                     trace=trace)
         return self._total
 
     def rebase_incremental(self, order: Sequence[KernelProfile],
@@ -518,9 +545,16 @@ class DeltaEvaluator:
         return self.evaluate_costed(cand, first_changed)[0]
 
     def evaluate_costed(self, cand: Sequence[KernelProfile],
-                        first_changed: int) -> tuple[float, float]:
+                        first_changed: int,
+                        trace=None) -> tuple[float, float]:
         """As :meth:`evaluate`, plus the evaluation's cost as a
-        fraction of a full re-simulation (suffix length / n)."""
+        fraction of a full re-simulation (suffix length / n).
+
+        ``trace`` forwards to the suffix re-simulation (the batched
+        engines' exact verification re-sims attach their recorder
+        here); a checkpoint-resumed suffix only records spans from the
+        resume point on.
+        """
         if self._per_position:
             # One checkpoint per position, captured before any block
             # of that position was dispatched: the checkpoint at
@@ -528,8 +562,9 @@ class DeltaEvaluator:
             if first_changed < len(self._ckpts):
                 cp = self._ckpts[first_changed]
                 frac = (len(cand) - cp.pos) / max(len(cand), 1)
-                return self.sim.simulate(cand, start_state=cp)[0], frac
-            return self.sim.simulate(cand)[0], 1.0
+                return self.sim.simulate(cand, start_state=cp,
+                                         trace=trace)[0], frac
+            return self.sim.simulate(cand, trace=trace)[0], 1.0
         # Round model: only checkpoints strictly before the first
         # changed position are safe — the round preceding a checkpoint
         # at position p closed by examining the kernel at p (failed or
@@ -542,11 +577,11 @@ class DeltaEvaluator:
             else:
                 break
         if best is None:
-            return self.sim.simulate(cand)[0], 1.0
+            return self.sim.simulate(cand, trace=trace)[0], 1.0
         frac = (len(cand) - best.pos) / max(len(cand), 1)
         t = self.sim.simulate(cand, start_pos=best.pos,
                               head_blocks=best.blocks_left,
-                              t0=best.time)[0]
+                              t0=best.time, trace=trace)[0]
         return t, frac
 
     def boundaries(self) -> list[int] | None:
@@ -614,8 +649,16 @@ def refine_order(
     neighborhood: str = "full",
     batch_size: int | None = None,
     table=None,
+    metrics=None,
 ) -> tuple[list[KernelProfile], float, int]:
     """Hill-climb ``order`` under ``time_fn``.
+
+    ``metrics`` (a :class:`repro.obs.MetricsRegistry`) records the
+    refinement's budget accounting — candidate evaluations under
+    ``refine_evals``, charged full-simulation-equivalent cost under
+    ``refine_cost``, and the scoring pass's wall clock under the
+    ``refine_score_s`` histogram.  Purely additive: the search
+    trajectory is unchanged.
 
     With the default ``time_fn``, candidates are delta-evaluated
     (suffix re-simulation from cached admission checkpoints) under
@@ -657,7 +700,8 @@ def refine_order(
         return refine_order_batched(
             order, device, model=model, budget=budget,
             neighborhood=neighborhood, batch_size=batch_size,
-            table=table)
+            table=table, metrics=metrics)
+    t_wall = perf_counter()
     if neighborhood == "auto":
         # Full neighbourhood while it still dominates the reference
         # within a serving budget; past that, local (adjacent) moves
@@ -715,6 +759,11 @@ def refine_order(
                     # checkpoint prefix with a recorded suffix re-sim,
                     # so acceptance costs no more than evaluation did.
                     delta.rebase_incremental(best, first)
+    if metrics is not None:
+        metrics.counter("refine_evals").inc(evals)
+        metrics.counter("refine_cost").inc(cost)
+        metrics.histogram("refine_score_s").observe(
+            perf_counter() - t_wall)
     return best, best_t, evals
 
 

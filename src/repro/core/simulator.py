@@ -99,15 +99,26 @@ class RoundSimulator:
 
     device: DeviceModel
 
-    def simulate(self, order: Sequence[KernelProfile]) -> float:
+    def simulate(self, order: Sequence[KernelProfile], *,
+                 trace=None) -> float:
+        """Execution time of ``order`` under the round model.
+
+        ``trace`` (a :class:`repro.obs.ScheduleTrace`) records one
+        span per kernel per round — the round model is scalar per
+        unit, so all spans land on unit 0 — plus a round-boundary
+        instant when each round closes.  Tracing only reads state:
+        the returned float is bit-identical with and without it.
+        """
         dev = self.device
         # FIFO of [kernel, blocks still to dispatch on this unit].
         pending: deque[list] = deque(
             [k, k.blocks_per_unit(dev)] for k in order)
         total = 0.0
+        r_idx = 0
         while pending:
             used = {d: 0.0 for d in dev.caps}
             blocks, inst, mem = 0, 0.0, 0.0
+            members: list = []
             while pending:
                 k, nb = pending[0]
                 d = k.demands
@@ -127,6 +138,8 @@ class RoundSimulator:
                 blocks += fit
                 inst += k.inst_per_block * fit
                 mem += k.mem_per_block() * fit
+                if trace is not None:
+                    members.append((k.name, fit))
                 pending[0][1] -= fit
                 if pending[0][1] == 0:
                     pending.popleft()
@@ -134,8 +147,17 @@ class RoundSimulator:
                     break  # partially admitted head: unit is full
             eff_c = max(dev.compute_efficiency(used), _EPS)
             eff_m = max(dev.memory_efficiency(used), _EPS)
+            r_start = total
             total += max(inst / (dev.compute_rate * eff_c),
                          mem / (dev.mem_bw * eff_m))
+            if trace is not None:
+                for name, nb in members:
+                    trace.span(0, name, r_start, total, blocks=nb,
+                               cat="round-member")
+                trace.instant(f"round {r_idx}", total, unit=0,
+                              cat="round")
+                trace.add_busy(0, total - r_start)
+            r_idx += 1
         return total
 
 
@@ -236,7 +258,7 @@ class EventSimulator:
 
     def simulate(self, order: Sequence[KernelProfile], *,
                  start_state: EventCheckpoint | None = None,
-                 record: bool = False):
+                 record: bool = False, trace=None):
         """Execution time of ``order``.
 
         ``start_state`` resumes from a previously recorded
@@ -248,6 +270,17 @@ class EventSimulator:
         ``(time, checkpoints)`` — one checkpoint per order position,
         captured the first time the dispatcher examines it; otherwise
         returns the time alone.
+
+        ``trace`` (a :class:`repro.obs.ScheduleTrace`) records one
+        span per drained cohort — kernel name, unit, admission
+        instant to drain instant, block count — plus per-unit busy
+        time for every ``dt`` the dispatcher advances.  Tracing only
+        reads state (every hook is ``if trace is not None``), so
+        modelled times are bit-identical with and without it.  On a
+        ``start_state`` resume, cohorts restored from the checkpoint
+        keep their original (pre-resume) admission instants while
+        busy time accrues only from the resume point, so the
+        span/busy conservation property only holds for fresh runs.
         """
         dev = self.device
         dims = tuple(dev.caps)
@@ -338,17 +371,25 @@ class EventSimulator:
                 eff_m = max(dev.memory_efficiency(used1), _EPS)
                 t1 = max(k.inst_per_block / (dev.compute_rate * eff_c),
                          k.mem_per_block() / (dev.mem_bw * eff_m))
-                for _ in range(math.ceil(nb / dev.n_units)):
+                for p in range(math.ceil(nb / dev.n_units)):
                     t += t1
+                    if trace is not None:
+                        for ui in range(min(dev.n_units,
+                                            nb - p * dev.n_units)):
+                            trace.span(ui, k.name, t - t1, t,
+                                       blocks=1, cat="solo")
+                            trace.add_busy(ui, t1)
                 try_admit()
                 continue
             dt = min(c.frac_left / u.lam
                      for u in units if u.cohorts for c in u.cohorts)
             t += dt
             freed = False
-            for u in units:
+            for ui, u in enumerate(units):
                 if not u.cohorts:
                     continue
+                if trace is not None:
+                    trace.add_busy(ui, dt)
                 done = []
                 for c in u.cohorts:
                     c.frac_left -= u.lam * dt
@@ -361,6 +402,9 @@ class EventSimulator:
                         for dim in dev.caps:
                             u.used[dim] -= c.kernel.demands[dim] * c.n_blocks
                         u.n_resident -= c.n_blocks
+                        if trace is not None:
+                            trace.span(ui, c.kernel.name, c.t_admit, t,
+                                       blocks=c.n_blocks)
                     u.recompute_rate(dev)
             if freed:
                 try_admit()
@@ -370,10 +414,11 @@ class EventSimulator:
 
 
 def simulate(order: Sequence[KernelProfile], device: DeviceModel,
-             model: str = "event") -> float:
-    """Convenience wrapper: execution time of ``order`` on ``device``."""
+             model: str = "event", trace=None) -> float:
+    """Convenience wrapper: execution time of ``order`` on ``device``.
+    ``trace`` forwards to the chosen simulator's recorder hook."""
     if model == "event":
-        return EventSimulator(device).simulate(order)
+        return EventSimulator(device).simulate(order, trace=trace)
     if model == "round":
-        return RoundSimulator(device).simulate(order)
+        return RoundSimulator(device).simulate(order, trace=trace)
     raise ValueError(f"unknown model {model!r}")

@@ -33,6 +33,7 @@ are actually scored in (``benchmarks/dag.py``,
 
 from __future__ import annotations
 
+from time import perf_counter
 from typing import Callable, Iterable, Sequence
 
 import numpy as np
@@ -453,6 +454,7 @@ def refine_order_dag(
     batch_size: int | None = None,
     table=None,
     rescore: bool | None = None,
+    metrics=None,
 ) -> tuple[list[KernelProfile], float, int]:
     """Precedence-respecting hill-climb of a topological launch order.
 
@@ -487,6 +489,11 @@ def refine_order_dag(
     returned time must be the DAG schedule's own scoring currency
     (best_t then *is* the gated makespan of ``best_order``, so no
     greedy fallback is needed on the gated scoreboard).
+
+    ``metrics`` (a :class:`repro.obs.MetricsRegistry`) records
+    ``refine_evals`` / ``refine_cost`` / ``refine_score_s`` exactly as
+    :func:`repro.core.refine.refine_order` does (and forwards to the
+    batched route) — purely additive, the trajectory is unchanged.
     """
     n = len(order)
     base = list(order)
@@ -507,7 +514,8 @@ def refine_order_dag(
             table=table, edge_ids=edge_ids,
             delta=(GatedDeltaEvaluator(device, edge_ids)
                    if model == "gated" else None),
-            legal=legal, rescore=rescore)
+            legal=legal, rescore=rescore, metrics=metrics)
+    t_wall = perf_counter()
     use_delta = time_fn is None and model in ("round", "event", "gated")
     if not use_delta:
         delta = None
@@ -557,4 +565,9 @@ def refine_order_dag(
                 best, best_t, improved = cand, t, True
                 if use_delta:
                     delta.rebase_incremental(best, first)
+    if metrics is not None:
+        metrics.counter("refine_evals").inc(evals)
+        metrics.counter("refine_cost").inc(cost)
+        metrics.histogram("refine_score_s").observe(
+            perf_counter() - t_wall)
     return best, best_t, evals

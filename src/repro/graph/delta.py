@@ -131,7 +131,7 @@ class _FastGatedSim:
 
     def simulate(self, order: Sequence[KernelProfile],
                  start_state: EventCheckpoint | None = None,
-                 record: bool = False
+                 record: bool = False, trace=None
                  ) -> tuple[float, list[EventCheckpoint]]:
         dev = self.device
         dims_n = len(self._dims)
@@ -223,6 +223,8 @@ class _FastGatedSim:
                     # retires the instant its predecessors drain.
                     retired[id(k)] = grid[id(k)]
                     head += 1
+                    if trace is not None:
+                        trace.instant(k.name, t, unit=None, cat="join")
                     continue
                 placed = False
                 for off in units_r:
@@ -294,18 +296,25 @@ class _FastGatedSim:
                 eff_m = max(self._eff(occ, dev.sat_memory), eps)
                 t1 = max(inst_b / (dev.compute_rate * eff_c),
                          mem_b / (dev.mem_bw * eff_m))
-                for _ in range(math.ceil(nb / n_units)):
+                for p in range(math.ceil(nb / n_units)):
                     t += t1
+                    if trace is not None:
+                        for ui in range(min(n_units, nb - p * n_units)):
+                            trace.span(ui, k.name, t - t1, t,
+                                       blocks=1, cat="solo")
+                            trace.add_busy(ui, t1)
                 retired[id(k)] = grid[id(k)]
                 try_admit()
                 continue
             dt = min([c[2] / u[3] for u in units if u[2] for c in u[2]])
             t += dt
             freed = False
-            for u in units:
+            for ui, u in enumerate(units):
                 cohorts = u[2]
                 if not cohorts:
                     continue
+                if trace is not None:
+                    trace.add_busy(ui, dt)
                 lam = u[3]
                 done = []
                 for c in cohorts:
@@ -324,6 +333,9 @@ class _FastGatedSim:
                         n_res_total -= nb
                         retired[id(c[0])] = (
                             retired.get(id(c[0]), 0) + nb)
+                        if trace is not None:
+                            trace.span(ui, c[0].name, c[3], t,
+                                       blocks=nb)
                     self._rate(u)
             if freed:
                 try_admit()

@@ -194,7 +194,7 @@ class DagEventSimulator:
 
     def simulate(self, order: Sequence[KernelProfile], *,
                  start_state: EventCheckpoint | None = None,
-                 record: bool = False):
+                 record: bool = False, trace=None):
         """Gated execution time of ``order``.
 
         ``start_state`` resumes from a previously recorded
@@ -205,6 +205,14 @@ class DagEventSimulator:
         captured the first time the dispatcher examines it (before the
         ready gate consults predecessor state, which itself depends
         only on earlier positions); otherwise returns the time alone.
+
+        ``trace`` (a :class:`repro.obs.ScheduleTrace`) records one
+        span per drained cohort and per-unit busy time, exactly like
+        the flat reference, plus a device-scoped **instant** per
+        zero-work join retirement (category ``"join"``).  Tracing
+        only reads state, so gated times are bit-identical with and
+        without it; the span/busy conservation property holds for
+        fresh (non-resumed) runs.
         """
         dev = self.device
         dims = tuple(dev.caps)
@@ -279,6 +287,8 @@ class DagEventSimulator:
                     # instant its predecessors drain, occupying nothing.
                     retired[id(k)] = grid[id(k)]
                     pending.popleft()
+                    if trace is not None:
+                        trace.instant(k.name, t, unit=None, cat="join")
                     continue
                 placed = False
                 for off in range(dev.n_units):
@@ -328,8 +338,14 @@ class DagEventSimulator:
                 eff_m = max(dev.memory_efficiency(used1), _EPS)
                 t1 = max(k.inst_per_block / (dev.compute_rate * eff_c),
                          k.mem_per_block() / (dev.mem_bw * eff_m))
-                for _ in range(math.ceil(nb / dev.n_units)):
+                for p in range(math.ceil(nb / dev.n_units)):
                     t += t1
+                    if trace is not None:
+                        for ui in range(min(dev.n_units,
+                                            nb - p * dev.n_units)):
+                            trace.span(ui, k.name, t - t1, t,
+                                       blocks=1, cat="solo")
+                            trace.add_busy(ui, t1)
                 retired[id(k)] = grid[id(k)]
                 try_admit()
                 continue
@@ -337,9 +353,11 @@ class DagEventSimulator:
                      for u in units if u.cohorts for c in u.cohorts)
             t += dt
             freed = False
-            for u in units:
+            for ui, u in enumerate(units):
                 if not u.cohorts:
                     continue
+                if trace is not None:
+                    trace.add_busy(ui, dt)
                 done = []
                 for c in u.cohorts:
                     c.frac_left -= u.lam * dt
@@ -354,6 +372,9 @@ class DagEventSimulator:
                         u.n_resident -= c.n_blocks
                         retired[id(c.kernel)] = (
                             retired.get(id(c.kernel), 0) + c.n_blocks)
+                        if trace is not None:
+                            trace.span(ui, c.kernel.name, c.t_admit, t,
+                                       blocks=c.n_blocks)
                     u.recompute_rate(dev)
             if freed:
                 try_admit()

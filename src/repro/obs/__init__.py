@@ -1,0 +1,27 @@
+"""repro.obs — observability for the scheduler/serving stack (PR 8).
+
+Three layers:
+
+* :mod:`repro.obs.trace`   — :class:`ScheduleTrace`, the per-kernel
+  admission/completion recorder every simulator feeds via ``trace=``;
+  exports Chrome-trace-event JSON (Perfetto) and terminal Gantt.
+* :mod:`repro.obs.metrics` — :class:`MetricsRegistry` with counters /
+  gauges / histograms; the single sink behind
+  ``ScheduleCache.stats()``, the composer counters, and the refiners'
+  budget accounting.
+* :mod:`repro.obs.profile` — phase-timing conventions
+  (:data:`PHASES`) and :func:`phase_breakdown` for the per-step
+  compose/guard/refine/execute wall-clock view.
+
+Design contract: a ``None`` recorder is zero-cost (every hook is
+``if trace is not None``) and an attached recorder never changes
+modelled times or served tokens — it only reads simulator state.
+``tests/test_obs.py`` property-tests both.
+"""
+
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .profile import PHASES, phase_breakdown
+from .trace import ScheduleTrace
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "PHASES", "phase_breakdown", "ScheduleTrace"]

@@ -30,7 +30,30 @@ from __future__ import annotations
 
 from collections import Counter, OrderedDict
 
+from repro.obs import MetricsRegistry
+
 __all__ = ["ScheduleCache", "Signature"]
+
+
+def _metric(name: str, cast=int, doc: str | None = None) -> property:
+    """Registry-backed counter exposed as a plain attribute.
+
+    PR 8 moved the cache's counters onto the
+    :class:`repro.obs.MetricsRegistry`, but every historical call
+    site (composer, live composition, tests) reads and increments
+    them as attributes — ``cache.dag_hits += 1``.  These properties
+    keep that surface byte-for-byte: the getter reads the registry
+    series (cast back to the legacy type), the setter makes augmented
+    assignment work unchanged.
+    """
+
+    def fget(self):
+        return cast(self.metrics.counter(name).value)
+
+    def fset(self, v):
+        self.metrics.counter(name).value = float(v)
+
+    return property(fget, fset, doc=doc)
 
 #: Work-item signature: what makes two items schedule-equivalent.
 #: Prefill chunks are keyed by exact token count (compiled geometry);
@@ -55,47 +78,90 @@ class ScheduleCache:
     execution is exact per request regardless of round membership.
     """
 
-    def __init__(self, kv_bucket: int = 256, max_entries: int = 256):
+    #: near-miss adaptations that seeded a composition (see
+    #: :meth:`near_miss`); every warm hit is also counted a miss,
+    #: since :meth:`lookup` failed first.
+    warm_hits = _metric("cache_warm_hits")
+    #: hits served on the respect_deps path (coarsened per-request
+    #: chain-signature keys); a subset of ``hits``.
+    dag_hits = _metric("cache_dag_hits")
+    #: replays rejected by the stale-replay re-validation (modelled
+    #: drift above ``SchedulerPolicy.replay_drift_tol`` or a
+    #: capacity violation on actual demands) and recomposed cold.
+    replay_revalidations = _metric("cache_replay_revalidations")
+    #: warm-start quality audit (ROADMAP item): on a sampled
+    #: fraction of warm hits the engine also recomputes the cold
+    #: greedy composition and records the modelled regret
+    #: ``t_warm / t_cold - 1`` (round cost model; negative means
+    #: the adapted composition modelled *better* than cold).
+    warm_sampled = _metric("cache_warm_sampled")
+    warm_regret_total = _metric("cache_warm_regret_total", cast=float)
+    #: live-composition counters (PR 7,
+    #: ``SchedulerPolicy.composition="incremental"``): chains
+    #: extended into / retired from the live frontier, and cold
+    #: recompositions forced by the drift backstop.
+    incremental_joins = _metric("cache_incremental_joins")
+    incremental_leaves = _metric("cache_incremental_leaves")
+    frontier_rebuilds = _metric("cache_frontier_rebuilds")
+    #: full gated simulations *not* paid because the per-step
+    #: gated guard resumed from a checkpointed prefix instead of
+    #: re-simulating from scratch (PR 7; fractional — each delta
+    #: evaluation saves ``1 - suffix_fraction`` of a full sim).
+    gated_sims_saved = _metric("cache_gated_sims_saved", cast=float)
+
+    def __init__(self, kv_bucket: int = 256, max_entries: int = 256,
+                 metrics: MetricsRegistry | None = None):
         self.kv_bucket = kv_bucket
         self.max_entries = max_entries
-        self.hits = 0
-        self.misses = 0
-        #: near-miss adaptations that seeded a composition (see
-        #: :meth:`near_miss`); every warm hit is also counted a miss,
-        #: since :meth:`lookup` failed first.
-        self.warm_hits = 0
-        #: hits served on the respect_deps path (coarsened per-request
-        #: chain-signature keys); a subset of ``hits``.
-        self.dag_hits = 0
-        #: replays rejected by the stale-replay re-validation (modelled
-        #: drift above ``SchedulerPolicy.replay_drift_tol`` or a
-        #: capacity violation on actual demands) and recomposed cold.
-        self.replay_revalidations = 0
-        #: warm-start quality audit (ROADMAP item): on a sampled
-        #: fraction of warm hits the engine also recomputes the cold
-        #: greedy composition and records the modelled regret
-        #: ``t_warm / t_cold - 1`` (round cost model; negative means
-        #: the adapted composition modelled *better* than cold).
-        self.warm_sampled = 0
-        self.warm_regret_total = 0.0
-        #: live-composition counters (PR 7,
-        #: ``SchedulerPolicy.composition="incremental"``): chains
-        #: extended into / retired from the live frontier, and cold
-        #: recompositions forced by the drift backstop.
-        self.incremental_joins = 0
-        self.incremental_leaves = 0
-        self.frontier_rebuilds = 0
-        #: full gated simulations *not* paid because the per-step
-        #: gated guard resumed from a checkpointed prefix instead of
-        #: re-simulating from scratch (PR 7; fractional — each delta
-        #: evaluation saves ``1 - suffix_fraction`` of a full sim).
-        self.gated_sims_saved = 0.0
+        #: the registry behind every counter attribute on this class;
+        #: pass the engine's shared registry so cache series land in
+        #: the same snapshot as the phase timers.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        # Per-namespace hit/miss series, resolved once (lookup() is a
+        # hot path): the legacy flat ``hits``/``misses`` totals are
+        # derived sums over these.
+        self._hit_c = {ns: self.metrics.counter("cache_hits",
+                                                namespace=ns)
+                       for ns in ("flat", "dag")}
+        self._miss_c = {ns: self.metrics.counter("cache_misses",
+                                                 namespace=ns)
+                        for ns in ("flat", "dag")}
         self._store: OrderedDict[tuple, tuple[tuple[Signature, ...], ...]] \
             = OrderedDict()
         #: modelled time of the composition each pattern was stored
         #: from (same key space as ``_store``); the baseline the
         #: stale-replay drift check compares against.
         self._times: dict[tuple, float | None] = {}
+
+    @property
+    def hits(self) -> int:
+        """Total lookup hits across both namespaces (legacy key)."""
+        return int(self._hit_c["flat"].value + self._hit_c["dag"].value)
+
+    @property
+    def misses(self) -> int:
+        """Total lookup misses across both namespaces (legacy key)."""
+        return int(self._miss_c["flat"].value
+                   + self._miss_c["dag"].value)
+
+    def hit_breakdown(self) -> dict:
+        """Per-namespace hit/miss counts (the satellite breakdown
+        surfaced in :meth:`stats` under ``"by_namespace"``)."""
+        return {ns: {"hits": int(self._hit_c[ns].value),
+                     "misses": int(self._miss_c[ns].value)}
+                for ns in ("flat", "dag")}
+
+    def reset(self, *, store: bool = True) -> None:
+        """Zero every counter; with ``store=True`` (default) also drop
+        the cached patterns and their stored times.  Only the cache's
+        own series (``cache_*``) are zeroed, so an engine-shared
+        registry keeps its phase timers; the registry keeps its
+        registered series (references held by the composer and
+        live-composition layers stay valid)."""
+        self.metrics.reset(prefix="cache_")
+        if store:
+            self._store.clear()
+            self._times.clear()
 
     def signature(self, kind: str, length: int) -> Signature:
         if kind == "decode":
@@ -120,10 +186,10 @@ class ScheduleCache:
                 f"{namespace} path consulted a {key[0]!r} key"
         pat = self._store.get(key)
         if pat is None:
-            self.misses += 1
+            self._miss_c[key[0]].inc()
             return None
         self._store.move_to_end(key)
-        self.hits += 1
+        self._hit_c[key[0]].inc()
         return pat
 
     def store(self, key: tuple,
@@ -192,6 +258,11 @@ class ScheduleCache:
                 if self.warm_sampled else 0.0)
 
     def stats(self) -> dict:
+        """Legacy-keyed counter snapshot (every pre-PR 8 key is
+        preserved verbatim) plus the per-namespace ``by_namespace``
+        hit/miss breakdown.  All values are served by the
+        :class:`repro.obs.MetricsRegistry` behind :attr:`metrics`."""
+        self.metrics.gauge("cache_entries").set(len(self._store))
         return {"hits": self.hits, "misses": self.misses,
                 "warm_hits": self.warm_hits,
                 "dag_hits": self.dag_hits,
@@ -202,4 +273,5 @@ class ScheduleCache:
                 "incremental_leaves": self.incremental_leaves,
                 "frontier_rebuilds": self.frontier_rebuilds,
                 "gated_sims_saved": self.gated_sims_saved,
-                "hit_rate": self.hit_rate, "entries": len(self._store)}
+                "hit_rate": self.hit_rate, "entries": len(self._store),
+                "by_namespace": self.hit_breakdown()}

@@ -199,11 +199,26 @@ class Composer:
         """The guard currency for one compose step
         (``policy.dag_guard``): the round cost model, or a per-step
         :class:`GatedGuard` whose checkpoints are shared across every
-        candidate the step scores."""
+        candidate the step scores.  Every call is timed into the
+        ``phase_guard`` histogram (the profiling hook for the guard
+        phase of a compose step)."""
         if self.policy.dag_guard == "gated":
-            return GatedGuard(self.device, traced, self.cache).time
-        return lambda rounds: sum(self.dag_round_time(rd)
-                                  for rd in rounds)
+            return self._timed_guard(
+                GatedGuard(self.device, traced, self.cache).time)
+        return self._timed_guard(
+            lambda rounds: sum(self.dag_round_time(rd)
+                               for rd in rounds))
+
+    def _timed_guard(self, fn):
+        """Wrap a guard currency so each candidate scoring lands in
+        the ``phase_guard`` wall-clock histogram."""
+        metrics = self.cache.metrics
+
+        def timed(rounds):
+            with metrics.timer("phase_guard"):
+                return fn(rounds)
+
+        return timed
 
     # -- DAG path -------------------------------------------------------
     def dag_fifo(self, triples, traced) -> list[list]:
@@ -271,13 +286,16 @@ class Composer:
                      if self.policy.refine_model in ("round", "event",
                                                      "gated")
                      else "round")
-            order, _, _ = refine_order_dag(
-                sched.order, self.device, edge_ids=sl_eids, model=model,
-                budget=self.policy.refine_budget,
-                neighborhood=self.policy.neighborhood,
-                batch_size=(self.policy.refine_batch
-                            if self.policy.refine_backend == "batched"
-                            else None))
+            with self.cache.metrics.timer("phase_refine"):
+                order, _, _ = refine_order_dag(
+                    sched.order, self.device, edge_ids=sl_eids,
+                    model=model,
+                    budget=self.policy.refine_budget,
+                    neighborhood=self.policy.neighborhood,
+                    batch_size=(self.policy.refine_batch
+                                if self.policy.refine_backend == "batched"
+                                else None),
+                    metrics=self.cache.metrics)
             prof_rounds = fifo_rounds_dag(order, self.device, sl_eids,
                                           demands_of=dem)
         else:
@@ -529,14 +547,16 @@ class Composer:
                 # flat-order refinement under the core simulator,
                 # delta-evaluated (suffix re-simulation from cached
                 # admission checkpoints), then re-rounded by capacity
-                order, _, _ = refine_order(
-                    sched.order, self.device,
-                    model=self.policy.refine_model,
-                    budget=self.policy.refine_budget,
-                    neighborhood=self.policy.neighborhood,
-                    batch_size=(self.policy.refine_batch
-                                if self.policy.refine_backend == "batched"
-                                else None))
+                with self.cache.metrics.timer("phase_refine"):
+                    order, _, _ = refine_order(
+                        sched.order, self.device,
+                        model=self.policy.refine_model,
+                        budget=self.policy.refine_budget,
+                        neighborhood=self.policy.neighborhood,
+                        batch_size=(self.policy.refine_batch
+                                    if self.policy.refine_backend
+                                    == "batched" else None),
+                        metrics=self.cache.metrics)
             else:
                 # local search over the flat order, re-rounded by
                 # greedy capacity packing under the round cost model
@@ -547,10 +567,12 @@ class Composer:
                                           self.weights_bytes)
                                for r in rds)
 
-                order, _, _ = refine_order(
-                    sched.order, self.device, time_fn=tfn,
-                    budget=self.policy.refine_budget,
-                    neighborhood=self.policy.neighborhood)
+                with self.cache.metrics.timer("phase_refine"):
+                    order, _, _ = refine_order(
+                        sched.order, self.device, time_fn=tfn,
+                        budget=self.policy.refine_budget,
+                        neighborhood=self.policy.neighborhood,
+                        metrics=self.cache.metrics)
             its = [by_name[p.name][0] for p in order]
             rounds = fifo_rounds(its, self.device)
             result = [[by_name[it.name] for it in rd] for rd in rounds]
@@ -560,11 +582,13 @@ class Composer:
         # Cost-model guard: Algorithm 1 is profile-greedy; never accept
         # a composition the round cost model says is worse than arrival
         # order (the scheduler's own timing model is always available).
-        t_alg = sum(round_time([t[0] for t in rd], self.device,
-                               self.weights_bytes) for rd in composed)
-        fifo = fifo_rounds([t[0] for t in items], self.device)
-        t_fifo = sum(round_time(r, self.device, self.weights_bytes)
-                     for r in fifo)
+        with self.cache.metrics.timer("phase_guard"):
+            t_alg = sum(round_time([t[0] for t in rd], self.device,
+                                   self.weights_bytes)
+                        for rd in composed)
+            fifo = fifo_rounds([t[0] for t in items], self.device)
+            t_fifo = sum(round_time(r, self.device, self.weights_bytes)
+                         for r in fifo)
         if t_fifo < t_alg:
             result = [[by_name[it.name] for it in rd] for rd in fifo]
         else:

@@ -39,6 +39,7 @@ from repro.core.tpu import (TpuWorkItem, decode_profile,
                             make_serving_device, prefill_profile,
                             round_time)
 from repro.graph.kernel_graph import trace_arch
+from repro.obs import MetricsRegistry, phase_breakdown
 from repro.models import transformer as T
 from repro.models.common import ModelConfig
 
@@ -221,7 +222,8 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_len: int = 256,
                  n_params: float | None = None,
                  policy: SchedulerPolicy | None = None,
-                 device=None):
+                 device=None, metrics: MetricsRegistry | None = None,
+                 trace=None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -233,8 +235,20 @@ class ServingEngine:
         self._decode_jit = jax.jit(
             lambda p, t, c, s: T.decode_step(p, cfg, t, c, s))
         self._round_times: list[float] = []
+        #: the unified registry (PR 8): cache counters, composer
+        #: guard/refine timers and the engine's own phase timers all
+        #: land here; ``run()`` re-exports its snapshot.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        #: optional :class:`repro.obs.ScheduleTrace` — when set,
+        #: ``step()`` records one span per executed round member on
+        #: the engine's modelled-round timeline (round boundaries as
+        #: instants).  Purely read-only over already-computed round
+        #: times, so modelled times and generated tokens are
+        #: bit-identical with and without it.
+        self.trace = trace
+        self._trace_t = 0.0
         self.schedule_cache = ScheduleCache(
-            kv_bucket=self.policy.kv_bucket)
+            kv_bucket=self.policy.kv_bucket, metrics=self.metrics)
         self.composer = Composer(self.policy, self.device,
                                  self.weights_bytes,
                                  self.schedule_cache)
@@ -331,32 +345,53 @@ class ServingEngine:
         modelled time but trigger no execution — the request's exact
         forward pass runs once, at its chain's tail item.  With
         ``composition="incremental"`` the traced step composes through
-        the live frontier instead of the batch pipeline."""
-        if self.policy.respect_deps:
-            triples, traced = self._work_items_dag()
-            if not triples:
-                return 0
-            if self.live is not None:
-                rounds = self.live.compose_dag(triples, traced)
+        the live frontier instead of the batch pipeline.
+
+        Observability (PR 8): the whole composition pipeline is timed
+        under the ``phase_compose`` histogram and the execution loop
+        under ``phase_execute`` (the composer's own ``phase_guard`` /
+        ``phase_refine`` are sub-intervals of compose); with
+        :attr:`trace` set, each executed round is recorded on the
+        modelled-round timeline."""
+        self.metrics.counter("engine_steps").inc()
+        with self.metrics.timer("phase_compose"):
+            if self.policy.respect_deps:
+                triples, traced = self._work_items_dag()
+                if not triples:
+                    return 0
+                if self.live is not None:
+                    rounds = self.live.compose_dag(triples, traced)
+                else:
+                    rounds = self._compose_dag(triples, traced)
+                time_of = self._dag_round_time
             else:
-                rounds = self._compose_dag(triples, traced)
-            time_of = self._dag_round_time
-        else:
-            items = self._work_items()
-            if not items:
-                return 0
-            rounds = self._compose(items)
-            time_of = lambda rd: round_time(  # noqa: E731
-                [t[0] for t in rd], self.device, self.weights_bytes)
+                items = self._work_items()
+                if not items:
+                    return 0
+                rounds = self._compose(items)
+                time_of = lambda rd: round_time(  # noqa: E731
+                    [t[0] for t in rd], self.device, self.weights_bytes)
         n = 0
-        for rd in rounds:
-            self._round_times.append(time_of(rd))
-            for it, r, kind in rd:
-                if kind == "prefill":
-                    self._exec_prefill(r)
-                elif kind == "decode":
-                    self._exec_decode(r)
-            n += 1
+        with self.metrics.timer("phase_execute"):
+            for rd in rounds:
+                rt = time_of(rd)
+                self._round_times.append(rt)
+                if self.trace is not None:
+                    t0 = self._trace_t
+                    for it, r, kind in rd:
+                        self.trace.span(0, it.name, t0, t0 + rt,
+                                        cat=kind)
+                    self.trace.instant(
+                        f"round {len(self._round_times) - 1}",
+                        t0 + rt, unit=0, cat="round")
+                    self.trace.add_busy(0, rt)
+                self._trace_t += rt
+                for it, r, kind in rd:
+                    if kind == "prefill":
+                        self._exec_prefill(r)
+                    elif kind == "decode":
+                        self._exec_decode(r)
+                n += 1
         return n
 
     def run(self, max_iters: int = 10_000,
@@ -387,5 +422,7 @@ class ServingEngine:
             "modelled_tokens_per_s": total_tokens /
             max(sum(self._round_times), 1e-12),
             "schedule_cache": self.schedule_cache.stats(),
+            "metrics": self.metrics.snapshot(),
+            "phases": phase_breakdown(self.metrics),
             "outputs": {r.rid: list(r.generated) for r in self.queue},
         }

@@ -145,8 +145,9 @@ class LiveComposition:
             return self._rebuild(triples, traced, chains, count=True)
         # -- backstops: capacity, modelled-ratio drift, step guard ----
         fifo = composer.dag_fifo(triples, traced)
-        t_inc = sum(composer.dag_round_time(rd) for rd in rounds)
-        t_fifo = sum(composer.dag_round_time(rd) for rd in fifo)
+        with cache.metrics.timer("phase_guard"):
+            t_inc = sum(composer.dag_round_time(rd) for rd in rounds)
+            t_fifo = sum(composer.dag_round_time(rd) for rd in fifo)
         ratio = t_inc / max(t_fifo, 1e-30)
         tol = policy.replay_drift_tol
         drifted = (tol is not None and tol > 0

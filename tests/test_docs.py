@@ -95,5 +95,7 @@ def test_architecture_names_cover_scheduling_packages():
                 "repro.graph.delta", "repro.slice.slicer",
                 "repro.slice.graph", "repro.slice.constrained",
                 "repro.serve.engine", "repro.serve.composer",
-                "repro.serve.cache", "repro.serve.live"):
+                "repro.serve.cache", "repro.serve.live",
+                "repro.obs.trace", "repro.obs.metrics",
+                "repro.obs.profile"):
         assert mod in text, f"architecture.md no longer names {mod}"
