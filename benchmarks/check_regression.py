@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 import sys
 
@@ -85,15 +86,21 @@ _SERVE_SURFACE = ("Request", "ScheduleCache", "SchedulerPolicy",
                   "ServingEngine", "Signature")
 
 
-def trace_overhead_ratio(*, repeats: int = 5, inner: int = 4) -> dict:
+def trace_overhead_ratio(*, repeats: int = 7, inner: int | None = None,
+                         min_sample_s: float = 0.05) -> dict:
     """Wall-time ratio of a traced vs untraced compose + simulate
     pass: the ready-set greedy over a traced qwen arch on the x4
     serving device, then :class:`repro.graph.streams.DagEventSimulator`
     with a live :class:`repro.obs.ScheduleTrace` vs ``trace=None``.
 
     Interleaved best-of-``repeats`` (each repeat times both sides
-    back-to-back, ``inner`` passes per sample) so slow drift on a
-    shared runner hits both sides equally."""
+    back-to-back) so slow drift on a shared runner hits both sides
+    equally.  ``inner`` (passes per timed sample) defaults to
+    whatever makes one untraced sample take at least
+    ``min_sample_s`` — a single compose+simulate pass is sub-ms, and
+    a ratio of two sub-ms samples flaps on any scheduler hiccup, so
+    the sample is stretched until the 10% headroom is milliseconds
+    wide and best-of-k can actually filter the noise."""
     import time
 
     from repro.configs import get_config
@@ -110,21 +117,25 @@ def trace_overhead_ratio(*, repeats: int = 5, inner: int = 4) -> dict:
     device = make_serving_device(n_units=4)
     eids = g.edges_by_id()
 
-    def once(with_trace: bool) -> float:
+    def once(with_trace: bool, n: int = 1) -> float:
         t0 = time.perf_counter()
-        for _ in range(inner):
+        for _ in range(n):
             sched = greedy_order_dag(g.kernels, device, edges=g.edges)
             tr = ScheduleTrace() if with_trace else None
             DagEventSimulator(device, eids).simulate(sched.order,
                                                      trace=tr)
         return time.perf_counter() - t0
 
-    once(False)                       # warm caches on neither side
+    warm = once(False)                # warm caches on neither side
+    if inner is None:
+        # calibrate: stretch the sample until one untraced timing is
+        # at least min_sample_s, so the gate compares multi-ms walls
+        inner = max(1, int(math.ceil(min_sample_s / max(warm, 1e-6))))
     t_off = t_on = float("inf")
     for _ in range(max(repeats, 1)):
-        t_off = min(t_off, once(False))
-        t_on = min(t_on, once(True))
-    return {"wall_off_s": t_off, "wall_on_s": t_on,
+        t_off = min(t_off, once(False, inner))
+        t_on = min(t_on, once(True, inner))
+    return {"wall_off_s": t_off, "wall_on_s": t_on, "inner": inner,
             "ratio": t_on / max(t_off, 1e-12)}
 
 

@@ -785,6 +785,7 @@ def refine_order_batched(
     once."""
     from .refine import DeltaEvaluator, _apply, _moves
 
+    t_wall = perf_counter()
     n = len(order)
     if neighborhood == "auto":
         neighborhood = "full" if n <= 128 else "adjacent"

@@ -18,7 +18,7 @@ import random
 import pytest
 
 from repro.core import (GTX580, EventSimulator, KernelProfile,
-                        RoundSimulator)
+                        RoundSimulator, refine_order)
 from repro.core.refine import (DeltaEvaluator, _FastEventSim,
                                _FastRoundSim)
 from repro.core.resources import (bs_kernel, ep_kernel, es_kernel,
@@ -345,6 +345,50 @@ def test_metric_classes_standalone():
 
 
 # --------------------------------------------------------------------------
+# refinement metrics through the batched backend (the composer path)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", ["round", "event"])
+def test_refine_batched_populates_metrics(model):
+    rng = random.Random(7)
+    ks = _gpu_kernels(rng, 12)
+    m = MetricsRegistry()
+    best, best_t, evals = refine_order(
+        ks, GTX580, model=model, budget=40, batch_size=4, metrics=m)
+    snap = m.snapshot()
+    assert snap["refine_evals"] == evals >= 1
+    assert snap["refine_cost"] >= 1.0
+    assert snap["refine_score_s.count"] == 1
+    assert snap["refine_score_s.total_s"] >= 0.0
+    # metrics are purely additive: same trajectory with them off
+    best2, best_t2, evals2 = refine_order(
+        ks, GTX580, model=model, budget=40, batch_size=4)
+    assert best_t2 == best_t and evals2 == evals
+    assert [k.name for k in best2] == [k.name for k in best]
+
+
+def test_refine_dag_batched_gated_populates_metrics():
+    from repro.graph import refine_order_dag
+
+    rng = random.Random(11)
+    n = 16
+    ks = _gpu_kernels(rng, n)
+    edges = _random_dag_edges(rng, n)
+    edge_ids = {(id(ks[u]), id(ks[v])) for u, v in edges}
+    m = MetricsRegistry()
+    _, t, evals = refine_order_dag(
+        ks, GTX580, edge_ids=edge_ids, model="gated", budget=20,
+        batch_size=8, metrics=m)
+    snap = m.snapshot()
+    assert snap["refine_evals"] == evals >= 1
+    assert snap["refine_score_s.count"] == 1
+    _, t2, evals2 = refine_order_dag(
+        ks, GTX580, edge_ids=edge_ids, model="gated", budget=20,
+        batch_size=8)
+    assert (t2, evals2) == (t, evals)
+
+
+# --------------------------------------------------------------------------
 # ScheduleCache on the registry (satellite: reset + namespace breakdown)
 # --------------------------------------------------------------------------
 
@@ -430,3 +474,32 @@ def test_engine_instrumentation_bit_identical_and_phased():
     assert tr.spans
     assert tr.makespan == pytest.approx(s_inst["modelled_time_s"],
                                         rel=1e-9)
+
+
+def test_engine_batched_refine_backend_records_metrics():
+    """The composer hands ``cache.metrics`` to every refinement call,
+    so the batched backend must accept a live registry end-to-end
+    (regression: refine_order_batched once referenced an undefined
+    ``t_wall`` whenever metrics were on)."""
+    jax = pytest.importorskip("jax")
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.serve import Request, SchedulerPolicy, ServingEngine
+
+    cfg = get_config("qwen1.5-0.5b", "smoke")
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, max_len=32,
+                        policy=SchedulerPolicy(
+                            kind="refined", refine_model="event",
+                            refine_backend="batched", refine_batch=8,
+                            refine_budget=20))
+    rng = np.random.default_rng(0)
+    eng.submit([Request(i, rng.integers(0, 128, size=4),
+                        max_new_tokens=3) for i in range(2)])
+    stats = eng.run()
+    assert stats["total_new_tokens"] > 0
+    snap = stats["metrics"]
+    assert snap["refine_evals"] >= 1
+    assert snap["refine_score_s.count"] >= 1
