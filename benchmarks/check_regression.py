@@ -79,6 +79,15 @@ _CHURN_FLOOR = 1.6
 #: here before it shows up in serving step times)
 _TRACE_OVERHEAD = 1.10
 
+#: ceiling on the audit-on / audit-off wall-time ratio of the serving
+#: compose loop at ``audit_frac=0.05`` (PR 9: the online Fig.-1 audit
+#: re-scores one served step in twenty against 50 delta-evaluated
+#: random orders, so the sampled audits must amortize to within 15%
+#: of the audit-off loop — checkpoint reuse in the
+#: GatedDeltaEvaluator is what keeps this affordable, and a change
+#: that degrades it to K full simulations per audit shows up here)
+_AUDIT_OVERHEAD = 1.15
+
 #: the PR 7 package split re-exports the historical flat import
 #: surface; a rename that silently drops one of these breaks every
 #: external consumer, so the guard imports them by name
@@ -136,6 +145,85 @@ def trace_overhead_ratio(*, repeats: int = 7, inner: int | None = None,
         t_off = min(t_off, once(False, inner))
         t_on = min(t_on, once(True, inner))
     return {"wall_off_s": t_off, "wall_on_s": t_on, "inner": inner,
+            "ratio": t_on / max(t_off, 1e-12)}
+
+
+def audit_overhead_ratio(*, repeats: int = 7, inner: int | None = None,
+                         min_sample_s: float = 0.05,
+                         frac: float = 0.05, k: int = 50) -> dict:
+    """Wall-time ratio of the serving compose loop with the online
+    quality audit sampling at ``frac`` vs auditing disabled.
+
+    Model-free replica of the engine's step hook: each pass composes a
+    traced qwen step cold (``kind="refined"``, gated refinement and
+    guard) and, on the auditor's deterministic ``frac`` sample, scores
+    it against ``k`` random topological orders through
+    :class:`repro.obs.QualityAuditor` — exactly what
+    ``audit_frac=0.05`` costs a serving engine.  Interleaved
+    best-of-``repeats`` like :func:`trace_overhead_ratio`, with one
+    twist: the timed sample is stretched to a multiple of the sampling
+    period ``1/frac`` so every sample pays the same whole number of
+    audits (a fractional period would make the ratio depend on where
+    the sample window cuts the deterministic audit pattern)."""
+    import time
+
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.tpu import make_serving_device
+    from repro.graph.kernel_graph import (arch_kv_bytes_per_token,
+                                          estimate_n_params)
+    from repro.serve import (Composer, Request, ScheduleCache,
+                             SchedulerPolicy, build_dag_triples)
+
+    cfg = get_config("qwen1.5-0.5b", "full")
+    n_params = estimate_n_params(cfg)
+    kvb = arch_kv_bytes_per_token(cfg)
+    decoded = object()   # build_dag_triples only checks `cache is None`
+    reqs = []
+    for rid, (phase, n) in enumerate([("prefill", 64)] * 2
+                                     + [("decode", 128 * (i + 1))
+                                        for i in range(3)]):
+        r = Request(rid, np.zeros(n, np.int32))
+        if phase == "decode":
+            r.cache, r.pos = decoded, n
+        reqs.append(r)
+    # small step graph: one timed sample is 1/frac composes, so the
+    # per-step cost sets the gate's total wall time
+    triples, traced = build_dag_triples(cfg, reqs, n_params=n_params,
+                                        kv_bytes_per_token=kvb,
+                                        max_stages=8)
+    device = make_serving_device(n_units=4)
+
+    def once(f: float, n: int = 1) -> float:
+        # fresh composer per sample: the auditor's step counter
+        # restarts, so every audit-on sample fires the identical
+        # deterministic audit pattern
+        pol = SchedulerPolicy(kind="refined", respect_deps=True,
+                              refine_model="gated", dag_guard="gated",
+                              cache=False, audit_frac=f, audit_k=k)
+        comp = Composer(pol, device, 2.0 * n_params, ScheduleCache())
+        aud = comp.auditor
+        t0 = time.perf_counter()
+        for _ in range(n):
+            rounds = comp.compose_dag(triples, traced)
+            if aud.sample_step():
+                aud.audit_dag(rounds, traced, arch=cfg.name,
+                              kind="refined")
+        return time.perf_counter() - t0
+
+    warm = once(0.0)                  # warm caches on neither side
+    period = max(1, round(1.0 / frac))
+    if inner is None:
+        inner = max(1, int(math.ceil(min_sample_s / max(warm, 1e-6))))
+    inner = period * int(math.ceil(inner / period))
+    t_off = t_on = float("inf")
+    for _ in range(max(repeats, 1)):
+        t_off = min(t_off, once(0.0, inner))
+        t_on = min(t_on, once(frac, inner))
+    return {"wall_off_s": t_off, "wall_on_s": t_on, "inner": inner,
+            "audit_frac": frac, "audit_k": k,
+            "audits_per_sample": inner // period,
             "ratio": t_on / max(t_off, 1e-12)}
 
 
@@ -204,6 +292,13 @@ def main(argv=None) -> int:
                          "ratio of a compose + gated-simulate pass "
                          "(0 disables; interleaved best-of-k on this "
                          "box, no committed baseline needed)")
+    ap.add_argument("--audit-overhead", type=float,
+                    default=_AUDIT_OVERHEAD,
+                    help="ceiling on the audit-on/audit-off wall-time "
+                         "ratio of the serving compose loop at "
+                         "audit_frac=0.05 (0 disables; interleaved "
+                         "best-of-k on this box, no committed "
+                         "baseline needed)")
     ap.add_argument("--quick", action="store_true",
                     help="skip the slow oracle/full baselines entirely "
                          "(fresh run measures only the guarded cells)")
@@ -258,6 +353,16 @@ def main(argv=None) -> int:
                 f"({tr['wall_on_s'] * 1e3:.1f} ms vs "
                 f"{tr['wall_off_s'] * 1e3:.1f} ms) > ceiling "
                 f"{args.trace_overhead:.2f}x")
+    if args.audit_overhead > 0:
+        au = audit_overhead_ratio()
+        if au["ratio"] > args.audit_overhead:
+            regressions.append(
+                f"online-audit overhead: audit_frac={au['audit_frac']} "
+                f"compose loop {au['ratio']:.3f}x audit-off "
+                f"({au['wall_on_s'] * 1e3:.1f} ms vs "
+                f"{au['wall_off_s'] * 1e3:.1f} ms, "
+                f"{au['audits_per_sample']} audits/sample) > ceiling "
+                f"{args.audit_overhead:.2f}x")
     if regressions:
         print("\nREGRESSION: construction wall time exceeded "
               f"{args.threshold:.2f}x the committed baseline:")

@@ -1,0 +1,70 @@
+"""One audited, recorded serving run, exported three ways.
+
+Runs the real :class:`repro.serve.ServingEngine` (smoke-size qwen,
+CPU greedy decode) with the PR 9 observability stack fully on —
+online quality auditing on every step, per-request latency spans,
+and a flight recorder — then exports what it observed:
+
+  PYTHONPATH=src python examples/serve_observability.py
+  -> metrics.prom  (Prometheus text exposition of every series)
+  -> flight.jsonl  (the decision log: schedule/cache/audit events)
+
+and prints the latency/goodput block, the audit verdict counters, and
+the flight recorder's postmortem timeline inline.  Served tokens are
+bit-identical to an uninstrumented run — every layer here is a pure
+observer (property-tested in ``tests/test_audit.py``).
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.obs import FlightRecorder, MetricsRegistry, prometheus_text
+from repro.serve import Request, SchedulerPolicy, ServingEngine
+
+
+def main():
+    cfg = get_config("qwen1.5-0.5b", "smoke")
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    metrics, recorder = MetricsRegistry(), FlightRecorder()
+    eng = ServingEngine(
+        cfg, params, max_len=64,
+        policy=SchedulerPolicy(kind="symbiotic", respect_deps=True,
+                               audit_frac=1.0, audit_k=25),
+        metrics=metrics, recorder=recorder)
+    rng = np.random.default_rng(0)
+    eng.submit([Request(i, rng.integers(0, 512, size=4),
+                        max_new_tokens=8) for i in range(4)])
+    stats = eng.run(arrivals=[
+        (3, [Request(10, rng.integers(0, 512, size=4),
+                     max_new_tokens=4)])])
+
+    lat = stats["latency"]
+    print(f"served {stats['total_new_tokens']} tokens over "
+          f"{stats['rounds']} rounds")
+    print(f"latency p50 {lat['p50_s'] * 1e3:.1f} ms / "
+          f"p99 {lat['p99_s'] * 1e3:.1f} ms, "
+          f"goodput {lat['goodput_rps']:.1f} req/s")
+    snap = stats["metrics"]
+    print(f"audit: {snap['audit_steps']:.0f} steps scored against "
+          f"{snap['audit_baselines']:.0f} random orders, "
+          f"{snap['audit_below_floor']:.0f} below the 90th-percentile "
+          "floor")
+
+    with open("metrics.prom", "w") as f:
+        f.write(prometheus_text(metrics))
+    recorder.dump("flight.jsonl")
+    print("wrote metrics.prom, flight.jsonl")
+
+    tl = FlightRecorder.timeline(FlightRecorder.load("flight.jsonl"))
+    print(f"\nflight timeline ({tl['n_events']} events, "
+          f"by kind {tl['by_kind']}):")
+    for line in tl["lines"][:12]:
+        print(f"  {line}")
+    if tl["n_events"] > 12:
+        print(f"  ... {tl['n_events'] - 12} more")
+
+
+if __name__ == "__main__":
+    main()

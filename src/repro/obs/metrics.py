@@ -27,9 +27,16 @@ prints.
 
 from __future__ import annotations
 
+import random
 import time
+import zlib
 
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry"]
+
+#: Reservoir size for histogram quantiles.  256 samples bound the
+#: p99 estimate's standard error to a few percentile points while
+#: keeping ``observe()`` O(1) and the memory per series fixed.
+RESERVOIR_SIZE = 256
 
 
 def _fmt(name: str, labels: tuple[tuple[str, str], ...]) -> str:
@@ -66,15 +73,19 @@ class Gauge:
 
 
 class Histogram:
-    """Streaming count/total/min/max summary of observations.
+    """Streaming count/total/min/max summary plus quantile reservoir.
 
     No buckets: the consumers here want means (seconds per phase per
-    step) and extrema, and a bucketed histogram would force a bucket
-    layout choice on every caller.  ``observe()`` is four attribute
-    writes — cheap enough for per-step phase timing.
+    step), extrema, and tail quantiles, and a bucketed histogram would
+    force a bucket layout choice on every caller.  Quantiles come from
+    a fixed-size reservoir (Vitter's algorithm R) seeded from the
+    series name, so two runs observing the same sequence produce
+    bit-identical p50/p95/p99 — determinism the engine's
+    bit-identity tests rely on.  ``observe()`` stays O(1).
     """
 
-    __slots__ = ("name", "count", "total", "vmin", "vmax")
+    __slots__ = ("name", "count", "total", "vmin", "vmax",
+                 "_reservoir", "_rng")
 
     def __init__(self, name: str):
         self.name = name
@@ -82,6 +93,10 @@ class Histogram:
         self.total = 0.0
         self.vmin = float("inf")
         self.vmax = float("-inf")
+        self._reservoir: list[float] = []
+        # Seed from the labelled name: deterministic across runs and
+        # processes (zlib.crc32, unlike hash(), is not salted).
+        self._rng = random.Random(zlib.crc32(name.encode()))
 
     def observe(self, v: float) -> None:
         self.count += 1
@@ -90,10 +105,29 @@ class Histogram:
             self.vmin = v
         if v > self.vmax:
             self.vmax = v
+        if len(self._reservoir) < RESERVOIR_SIZE:
+            self._reservoir.append(v)
+        else:
+            j = self._rng.randrange(self.count)
+            if j < RESERVOIR_SIZE:
+                self._reservoir[j] = v
 
     @property
     def mean(self) -> float:
         return self.total / self.count if self.count else 0.0
+
+    def quantile(self, q: float) -> float:
+        """Reservoir estimate of the ``q``-quantile (``0 <= q <= 1``).
+
+        Exact while ``count <= RESERVOIR_SIZE``; an unbiased sample
+        estimate beyond that.  Returns 0.0 for an empty histogram so
+        snapshots stay schema-stable.
+        """
+        if not self._reservoir:
+            return 0.0
+        xs = sorted(self._reservoir)
+        idx = min(len(xs) - 1, max(0, round(q * (len(xs) - 1))))
+        return xs[idx]
 
 
 class _Timer:
@@ -159,8 +193,9 @@ class MetricsRegistry:
 
         Counters and gauges render as their value; a histogram ``h``
         expands to ``h.count`` / ``h.total_s`` / ``h.mean_s`` /
-        ``h.min_s`` / ``h.max_s`` (empty histograms report zeros so
-        snapshots are schema-stable across runs).
+        ``h.min_s`` / ``h.max_s`` plus reservoir-sampled quantiles
+        ``h.p50_s`` / ``h.p95_s`` / ``h.p99_s`` (empty histograms
+        report zeros so snapshots are schema-stable across runs).
         """
         out: dict[str, float | int] = {}
         for key, m in sorted(self._metrics.items()):
@@ -170,6 +205,9 @@ class MetricsRegistry:
                 out[f"{key}.mean_s"] = m.mean
                 out[f"{key}.min_s"] = m.vmin if m.count else 0.0
                 out[f"{key}.max_s"] = m.vmax if m.count else 0.0
+                out[f"{key}.p50_s"] = m.quantile(0.50)
+                out[f"{key}.p95_s"] = m.quantile(0.95)
+                out[f"{key}.p99_s"] = m.quantile(0.99)
             else:
                 out[key] = m.value
         return out
@@ -187,5 +225,7 @@ class MetricsRegistry:
             if isinstance(m, Histogram):
                 m.count, m.total = 0, 0.0
                 m.vmin, m.vmax = float("inf"), float("-inf")
+                m._reservoir.clear()
+                m._rng = random.Random(zlib.crc32(m.name.encode()))
             else:
                 m.value = 0.0

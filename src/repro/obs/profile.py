@@ -12,7 +12,11 @@ The engine and composer time their work with
 * ``phase_refine``  — refinement passes inside the composer (also a
   sub-interval of compose, so guard+refine <= compose);
 * ``phase_execute`` — running the composed rounds (prefill/decode
-  execution; recorded by ``ServingEngine.step``).
+  execution; recorded by ``ServingEngine.step``);
+* ``phase_audit``   — online quality audits
+  (:class:`repro.obs.audit.QualityAuditor`) on the sampled steps —
+  kept outside ``phase_compose`` so audit cost never pollutes the
+  compose-time series the churn benchmarks guard.
 
 :func:`phase_breakdown` turns a registry into the per-step view
 ``benchmarks/serving.py`` prints.  Refiners report their own scoring
@@ -27,8 +31,8 @@ from .metrics import Histogram, MetricsRegistry
 __all__ = ["PHASES", "phase_breakdown"]
 
 #: engine-step phases, in pipeline order; guard and refine are
-#: sub-intervals of compose
-PHASES = ("compose", "guard", "refine", "execute")
+#: sub-intervals of compose, audit runs on sampled steps only
+PHASES = ("compose", "guard", "refine", "execute", "audit")
 
 
 def phase_breakdown(metrics: MetricsRegistry) -> dict:

@@ -260,7 +260,10 @@ class ScheduleCache:
     def stats(self) -> dict:
         """Legacy-keyed counter snapshot (every pre-PR 8 key is
         preserved verbatim) plus the per-namespace ``by_namespace``
-        hit/miss breakdown.  All values are served by the
+        hit/miss breakdown and (PR 9) the per-namespace EWMA replay
+        drift — how wrong replayed/maintained compositions currently
+        are, fed by the composer's re-validation path and the live
+        frontier's ratio backstop.  All values are served by the
         :class:`repro.obs.MetricsRegistry` behind :attr:`metrics`."""
         self.metrics.gauge("cache_entries").set(len(self._store))
         return {"hits": self.hits, "misses": self.misses,
@@ -274,4 +277,8 @@ class ScheduleCache:
                 "frontier_rebuilds": self.frontier_rebuilds,
                 "gated_sims_saved": self.gated_sims_saved,
                 "hit_rate": self.hit_rate, "entries": len(self._store),
-                "by_namespace": self.hit_breakdown()}
+                "by_namespace": self.hit_breakdown(),
+                "drift_ewma": {
+                    ns: self.metrics.gauge("replay_drift_ewma",
+                                           namespace=ns).value
+                    for ns in ("flat", "dag", "live")}}

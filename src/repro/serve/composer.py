@@ -33,6 +33,7 @@ from repro.core.tpu import fifo_rounds, round_time
 from repro.graph.constrained import greedy_order_dag, refine_order_dag
 from repro.graph.delta import GatedDeltaEvaluator
 from repro.graph.streams import fifo_rounds_dag
+from repro.obs import DriftMonitor, QualityAuditor
 from repro.slice import KernelSlicer, greedy_order_slices, join_item
 
 from .cache import ScheduleCache
@@ -153,11 +154,30 @@ class Composer:
     """
 
     def __init__(self, policy, device, weights_bytes: float,
-                 cache: ScheduleCache):
+                 cache: ScheduleCache, recorder=None):
         self.policy = policy
         self.device = device
         self.weights_bytes = weights_bytes
         self.cache = cache
+        #: optional :class:`repro.obs.FlightRecorder` — schedule
+        #: decisions, cache outcomes and rebuild reasons are emitted
+        #: as discrete events when set (``None`` is the zero-cost
+        #: null path, same contract as ``trace=``).
+        self.recorder = recorder
+        #: the online Fig.-1 sampler (PR 9); also owns the deprecated
+        #: ``warm_audit_frac`` warm-regret path, so the composer no
+        #: longer inlines it.
+        self.auditor = QualityAuditor(policy, device, cache.metrics,
+                                      recorder=recorder)
+        #: EWMA modelled-vs-revalidated drift per cache namespace,
+        #: fed by :meth:`replay_ok` and the live frontier's ratio
+        #: backstop.
+        self.drift = DriftMonitor(cache.metrics)
+
+    def _note(self, kind: str, **fields) -> None:
+        """Flight-recorder emission (no-op without a recorder)."""
+        if self.recorder is not None:
+            self.recorder.event(kind, **fields)
 
     # -- shared currencies ---------------------------------------------
     @staticmethod
@@ -345,13 +365,25 @@ class Composer:
                     # dep-aware arrival order" invariant survives
                     # cache hits.
                     if guard_time(fifo) < guard_time(replay):
+                        self._note("schedule", path="dag",
+                                   served="fifo", source="replay",
+                                   rounds=len(fifo))
                         return fifo
+                    self._note("schedule", path="dag",
+                               served="replay", rounds=len(replay))
                     return replay
+                if pattern is not None:
+                    self._note("cache", namespace="dag",
+                               outcome=("stale" if replay is not None
+                                        else "unmappable"))
         composed = self.dag_cold(triples, traced)
         # Same guard as the flat path: never accept a composition the
         # guard currency says is worse than (dep-aware) arrival order.
         result = fifo if guard_time(fifo) < guard_time(composed) \
             else composed
+        self._note("schedule", path="dag",
+                   served=("fifo" if result is fifo else "cold"),
+                   rounds=len(result))
         if key is not None:
             self.dag_store(key, result, labels)
         return result
@@ -494,17 +526,26 @@ class Composer:
         """Stale-replay re-validation: a replayed pattern whose
         modelled time drifts beyond ``policy.replay_drift_tol`` from
         the stored composition's — or that violates capacity on actual
-        demands — is rejected and the step recomposes cold."""
+        demands — is rejected and the step recomposes cold.  Every
+        re-validation feeds the per-namespace :class:`DriftMonitor`
+        with *how far* the replay drifted (accepted or not), the
+        magnitude signal the reject counter alone can't show."""
         tol = self.policy.replay_drift_tol
         if tol is None or tol <= 0:
             return True            # legacy optimistic replay
         cache = self.cache
         t0 = cache.time_of(key)
         t_now = sum(time_of(rd) for rd in rounds)
-        drifted = (t0 is not None and t0 > 0 and
-                   abs(t_now / t0 - 1.0) > tol)
+        rel = (abs(t_now / t0 - 1.0)
+               if t0 is not None and t0 > 0 else None)
+        if rel is not None:
+            self.drift.observe(key[0], rel)
+        drifted = rel is not None and rel > tol
         if drifted or not all(self.round_fits(rd) for rd in rounds):
             cache.replay_revalidations += 1
+            self._note("cache", namespace=key[0], outcome="revalidated",
+                       drift=rel, reason=("drift" if drifted
+                                          else "capacity"))
             return False
         return True
 
@@ -527,6 +568,8 @@ class Composer:
             if pattern is not None:
                 replay = self.apply_pattern(pattern, items, sigs)
                 if self.replay_ok(key, replay, self.flat_round_time):
+                    self._note("schedule", path="flat",
+                               served="replay", rounds=len(replay))
                     return replay
                 # Stale replay: recompose cold (the fresh composition
                 # re-stores under the same key).  Warm-start adaptation
@@ -539,6 +582,8 @@ class Composer:
                 if warm is not None:
                     result = self.warm_adapt(warm, items, sigs)
                     if result is not None:
+                        self._note("schedule", path="flat",
+                                   served="warm", rounds=len(result))
                         return self.cache_store(key, result, items, sigs)
         profs = [t[0].profile() for t in items]
         sched: Schedule = greedy_order_fast(profs, self.device)
@@ -576,6 +621,8 @@ class Composer:
             its = [by_name[p.name][0] for p in order]
             rounds = fifo_rounds(its, self.device)
             result = [[by_name[it.name] for it in rd] for rd in rounds]
+            self._note("schedule", path="flat", served="refined",
+                       rounds=len(result))
             return self.cache_store(key, result, items, sigs)
         composed = [[by_name[p.name] for p in rd.kernels]
                     for rd in sched.rounds]
@@ -593,6 +640,9 @@ class Composer:
             result = [[by_name[it.name] for it in rd] for rd in fifo]
         else:
             result = composed
+        self._note("schedule", path="flat",
+                   served=("fifo" if t_fifo < t_alg else "cold"),
+                   rounds=len(result))
         return self.cache_store(key, result, items, sigs)
 
     def signature_of(self, trip) -> tuple[str, int]:
@@ -665,20 +715,11 @@ class Composer:
             by_name = {t[0].name: t for t in items}
             result = [[by_name[it.name] for it in rd] for rd in fifo]
         else:
-            cache = self.cache
-            cache.warm_hits += 1
-            # Warm-start quality audit (deterministic sampling: the
-            # warm-hit counter crossing an integer multiple of 1/frac
-            # triggers a cold recompute; no RNG, so runs reproduce).
-            frac = self.policy.warm_audit_frac
-            if frac > 0 and (int(cache.warm_hits * frac) >
-                             int((cache.warm_hits - 1) * frac)):
-                sched = greedy_order_fast([t[0].profile() for t in items],
-                                          self.device)
-                nm = {t[0].name: t[0] for t in items}
-                t_cold = min(t_fifo, sum(
-                    round_time([nm[p.name] for p in rd.kernels],
-                               self.device, self.weights_bytes)
-                    for rd in sched.rounds))
-                cache.record_warm_regret(t_warm / max(t_cold, 1e-30) - 1.0)
+            self.cache.warm_hits += 1
+            # Warm-start quality audit: deprecated-but-aliased onto
+            # the online auditor (PR 9) — same deterministic
+            # integer-crossing sampling on the warm-hit counter, same
+            # ``warm_regret_mean`` / ``warm_sampled`` stats keys.
+            self.auditor.warm_audit(self.cache, items, t_warm, t_fifo,
+                                    self.weights_bytes)
         return result

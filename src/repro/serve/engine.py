@@ -39,7 +39,7 @@ from repro.core.tpu import (TpuWorkItem, decode_profile,
                             make_serving_device, prefill_profile,
                             round_time)
 from repro.graph.kernel_graph import trace_arch
-from repro.obs import MetricsRegistry, phase_breakdown
+from repro.obs import LatencyTracker, MetricsRegistry, phase_breakdown
 from repro.models import transformer as T
 from repro.models.common import ModelConfig
 
@@ -154,7 +154,32 @@ class SchedulerPolicy:
     #: ``1/frac``-th warm hit).  Off by default: each audited hit
     #: pays the full cold greedy the warm start exists to skip, so
     #: only measurement runs (``benchmarks/serving.py``) opt in.
+    #: **Deprecated alias** (PR 9): the sampling and regret recording
+    #: now live on the online auditor
+    #: (:meth:`repro.obs.audit.QualityAuditor.warm_audit`); the
+    #: ``warm_regret_mean`` / ``warm_sampled`` stats keys are
+    #: unchanged.  Prefer the ``audit_*`` knobs for new code.
     warm_audit_frac: float = 0.0
+    #: Online quality audit (PR 9): deterministically sample this
+    #: fraction of served steps and re-run the paper's Fig.-1
+    #: protocol live — score the served composition against
+    #: ``audit_k`` seeded random orders of the same kernel set under
+    #: the step's own currency (gated makespan on traced steps, round
+    #: cost model on flat steps).  Results land in the
+    #: ``audit_quality_percentile{arch,kind}`` histogram; a verdict
+    #: under ``audit_floor`` bumps ``audit_below_floor``.  Off by
+    #: default; ``check_regression.py --audit-overhead`` caps the
+    #: cost of ``audit_frac=0.05`` at 1.15x the audit-off run.
+    audit_frac: float = 0.0
+    #: random launch-order baselines per audited step (the paper's
+    #: design-space sample; K=50 is the acceptance protocol).
+    audit_k: int = 50
+    #: live SLO floor on the served order's percentile rank (the
+    #: paper claims "well above the 90 percentile mark").
+    audit_floor: float = 90.0
+    #: base seed for the audit baselines (each audited step derives a
+    #: distinct deterministic seed from it).
+    audit_seed: int = 0
     #: Move-evaluation backend for the refinement passes: "host" is
     #: the sequential delta evaluator; "batched" scores the move
     #: neighborhood in vectorized ``(B, n)`` passes
@@ -223,7 +248,7 @@ class ServingEngine:
                  n_params: float | None = None,
                  policy: SchedulerPolicy | None = None,
                  device=None, metrics: MetricsRegistry | None = None,
-                 trace=None):
+                 trace=None, recorder=None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -247,14 +272,27 @@ class ServingEngine:
         #: bit-identical with and without it.
         self.trace = trace
         self._trace_t = 0.0
+        #: optional :class:`repro.obs.FlightRecorder` (PR 9): the
+        #: composer, live frontier and auditor emit schedule
+        #: decisions, cache outcomes, rebuild reasons and audit
+        #: verdicts as JSONL events.  Same null-path contract as
+        #: ``trace``: tokens and modelled times are bit-identical
+        #: with and without it.
+        self.recorder = recorder
         self.schedule_cache = ScheduleCache(
             kv_bucket=self.policy.kv_bucket, metrics=self.metrics)
         self.composer = Composer(self.policy, self.device,
                                  self.weights_bytes,
-                                 self.schedule_cache)
+                                 self.schedule_cache,
+                                 recorder=recorder)
         self.live = (LiveComposition(self.composer)
                      if self.policy.composition == "incremental"
                      else None)
+        #: per-request arrival→completion latency spans (PR 9); fed
+        #: by ``submit()`` / ``step()``, exported as
+        #: ``run()``-stats ``"latency"`` (p50/p95/p99 + goodput).
+        self.latency = LatencyTracker(self.metrics)
+        self._completed_rids: set[int] = set()
 
     # -- workload characterisation -------------------------------------
     def _kv_bytes_per_token(self) -> float:
@@ -315,6 +353,8 @@ class ServingEngine:
     # -- execution -------------------------------------------------------
     def submit(self, reqs: list[Request]) -> None:
         self.queue.extend(reqs)
+        for r in reqs:
+            self.latency.arrive(r.rid)
 
     def _exec_prefill(self, r: Request) -> None:
         toks = jnp.asarray(r.prompt, jnp.int32)[None, :]
@@ -347,13 +387,20 @@ class ServingEngine:
         ``composition="incremental"`` the traced step composes through
         the live frontier instead of the batch pipeline.
 
-        Observability (PR 8): the whole composition pipeline is timed
-        under the ``phase_compose`` histogram and the execution loop
-        under ``phase_execute`` (the composer's own ``phase_guard`` /
-        ``phase_refine`` are sub-intervals of compose); with
-        :attr:`trace` set, each executed round is recorded on the
-        modelled-round timeline."""
+        Observability (PR 8-9): the whole composition pipeline is
+        timed under the ``phase_compose`` histogram and the execution
+        loop under ``phase_execute`` (the composer's own
+        ``phase_guard`` / ``phase_refine`` are sub-intervals of
+        compose); sampled steps run the online quality audit under
+        ``phase_audit`` (outside compose, so audit cost never skews
+        the compose-time series); with :attr:`trace` set, each
+        executed round is recorded on the modelled-round timeline;
+        the step's measured phase wall times are attributed to the
+        requests it served (:class:`repro.obs.LatencyTracker`)."""
         self.metrics.counter("engine_steps").inc()
+        phase0 = {ph: self.metrics.histogram(f"phase_{ph}").total
+                  for ph in ("compose", "guard", "refine", "execute")}
+        traced = None
         with self.metrics.timer("phase_compose"):
             if self.policy.respect_deps:
                 triples, traced = self._work_items_dag()
@@ -371,6 +418,19 @@ class ServingEngine:
                 rounds = self._compose(items)
                 time_of = lambda rd: round_time(  # noqa: E731
                     [t[0] for t in rd], self.device, self.weights_bytes)
+        # Online quality audit (PR 9): read-only over the composed
+        # rounds, on deterministically sampled steps only.
+        aud = self.composer.auditor
+        if aud.sample_step():
+            with self.metrics.timer("phase_audit"):
+                if traced is not None:
+                    aud.audit_dag(rounds, traced, arch=self.cfg.name,
+                                  kind=self.policy.kind)
+                else:
+                    aud.audit_flat(rounds,
+                                   weights_bytes=self.weights_bytes,
+                                   arch=self.cfg.name,
+                                   kind=self.policy.kind)
         n = 0
         with self.metrics.timer("phase_execute"):
             for rd in rounds:
@@ -392,6 +452,20 @@ class ServingEngine:
                     elif kind == "decode":
                         self._exec_decode(r)
                 n += 1
+        # Latency accounting: split this step's measured phase wall
+        # times across the requests it served ("compose" net of its
+        # guard/refine sub-intervals, so the four shares partition the
+        # step), then close spans for requests that just finished.
+        delta = {ph: self.metrics.histogram(f"phase_{ph}").total - t0
+                 for ph, t0 in phase0.items()}
+        delta["compose"] = max(
+            0.0, delta["compose"] - delta["guard"] - delta["refine"])
+        served = {r.rid: r for rd in rounds for _, r, _ in rd}
+        self.latency.attribute(served.keys(), delta)
+        for rid, r in served.items():
+            if r.done and rid not in self._completed_rids:
+                self._completed_rids.add(rid)
+                self.latency.complete(rid, tokens=len(r.generated))
         return n
 
     def run(self, max_iters: int = 10_000,
@@ -400,7 +474,15 @@ class ServingEngine:
 
         ``arrivals``: optional [(iteration, requests)] injections — a
         continuous-arrival workload where prefill and decode work
-        genuinely coexist in the queue."""
+        genuinely coexist in the queue.
+
+        The returned stats carry (PR 9) a ``"latency"`` block —
+        per-request arrival→completion p50/p95/p99, queue quantiles,
+        mean per-phase attribution and goodput over the run's wall
+        time (:meth:`repro.obs.LatencyTracker.stats`)."""
+        import time as _time
+
+        t_wall0 = _time.perf_counter()
         arrivals = list(arrivals or [])
         n_rounds = 0
         iters = 0
@@ -424,5 +506,7 @@ class ServingEngine:
             "schedule_cache": self.schedule_cache.stats(),
             "metrics": self.metrics.snapshot(),
             "phases": phase_breakdown(self.metrics),
+            "latency": self.latency.stats(
+                _time.perf_counter() - t_wall0),
             "outputs": {r.rid: list(r.generated) for r in self.queue},
         }

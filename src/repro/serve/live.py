@@ -114,7 +114,8 @@ class LiveComposition:
             return composer.dag_fifo(triples, traced)
         chains = self._chain_view(triples, traced)
         if not self._seeded:
-            return self._rebuild(triples, traced, chains, count=False)
+            return self._rebuild(triples, traced, chains, count=False,
+                                 reason="seed")
         cur = {key: len(items) for key, _, items in chains}
         left = [key for key, n in self._chains.items()
                 if cur.get(key) != n]
@@ -142,7 +143,8 @@ class LiveComposition:
                     cache.incremental_joins += 1
             rounds = self._materialize(triples, trip_by_name)
         except _Drift:
-            return self._rebuild(triples, traced, chains, count=True)
+            return self._rebuild(triples, traced, chains, count=True,
+                                 reason="label_drift")
         # -- backstops: capacity, modelled-ratio drift, step guard ----
         fifo = composer.dag_fifo(triples, traced)
         with cache.metrics.timer("phase_guard"):
@@ -150,12 +152,20 @@ class LiveComposition:
             t_fifo = sum(composer.dag_round_time(rd) for rd in fifo)
         ratio = t_inc / max(t_fifo, 1e-30)
         tol = policy.replay_drift_tol
+        if self._ratio0 is not None and self._ratio0 > 0:
+            # "live" namespace drift: how far the maintained frontier's
+            # modelled ratio has wandered from its last cold baseline.
+            composer.drift.observe("live",
+                                   ratio / self._ratio0 - 1.0)
         drifted = (tol is not None and tol > 0
                    and self._ratio0 is not None
                    and ratio > self._ratio0 * (1.0 + tol))
-        if (drifted
-                or not all(composer.round_fits(rd) for rd in rounds)):
-            return self._rebuild(triples, traced, chains, count=True)
+        if drifted:
+            return self._rebuild(triples, traced, chains, count=True,
+                                 reason="ratio_drift")
+        if not all(composer.round_fits(rd) for rd in rounds):
+            return self._rebuild(triples, traced, chains, count=True,
+                                 reason="capacity")
         if policy.dag_guard == "gated":
             guard = composer.dag_guard_fn(traced)
             guard_rejects = guard(fifo) < guard(rounds)
@@ -168,7 +178,12 @@ class LiveComposition:
             # its state is stale relative to what a cold composition
             # would serve — rebuild rather than silently serving fifo
             # forever off a losing frontier.
-            return self._rebuild(triples, traced, chains, count=True)
+            return self._rebuild(triples, traced, chains, count=True,
+                                 reason="guard")
+        if composer.recorder is not None:
+            composer.recorder.event("schedule", path="live",
+                                    served="incremental",
+                                    rounds=len(rounds))
         self._commit(chains, rounds,
                      self._stable_items(chains, traced.graph.kernels))
         return rounds
@@ -310,12 +325,21 @@ class LiveComposition:
         self._seeded = True
 
     # -- cold path ------------------------------------------------------
-    def _rebuild(self, triples, traced, chains, *, count: bool) \
-            -> list[list]:
+    def _rebuild(self, triples, traced, chains, *, count: bool,
+                 reason: str = "unknown") -> list[list]:
         """Cold recomposition through the batch pipeline, re-seeding
-        the frontier from whatever composition the guard serves."""
+        the frontier from whatever composition the guard serves.
+        ``reason`` names the backstop that fired (``seed`` /
+        ``label_drift`` / ``ratio_drift`` / ``capacity`` / ``guard``)
+        — emitted to the flight recorder and counted per reason."""
         composer = self.composer
         cache = composer.cache
+        if count:
+            cache.metrics.counter("frontier_rebuild_reason",
+                                  reason=reason).inc()
+        if composer.recorder is not None:
+            composer.recorder.event("rebuild", reason=reason,
+                                    counted=count)
         self.frontier.reset()
         guard = composer.dag_guard_fn(traced)
         fifo = composer.dag_fifo(triples, traced)

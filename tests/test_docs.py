@@ -97,5 +97,6 @@ def test_architecture_names_cover_scheduling_packages():
                 "repro.serve.engine", "repro.serve.composer",
                 "repro.serve.cache", "repro.serve.live",
                 "repro.obs.trace", "repro.obs.metrics",
-                "repro.obs.profile"):
+                "repro.obs.profile", "repro.obs.audit",
+                "repro.obs.latency", "repro.obs.export"):
         assert mod in text, f"architecture.md no longer names {mod}"

@@ -14,6 +14,7 @@ toolchain) over seeded draws, so failures reproduce exactly.
 import json
 import math
 import random
+import re
 
 import pytest
 
@@ -28,7 +29,9 @@ from repro.core.tpu import (decode_profile, make_serving_device,
 from repro.graph.delta import _FastGatedSim
 from repro.graph.streams import DagEventSimulator
 from repro.obs import (Counter, Gauge, Histogram, MetricsRegistry,
-                       PHASES, ScheduleTrace, phase_breakdown)
+                       PHASES, FlightRecorder, ScheduleTrace,
+                       parse_prometheus_text, phase_breakdown,
+                       prometheus_text)
 from repro.serve.cache import ScheduleCache
 from repro.slice import SlicePolicy, greedy_order_slices
 
@@ -265,6 +268,48 @@ def test_gantt_renders_every_unit():
     assert ScheduleTrace().gantt() == "(empty trace)"
 
 
+def test_gantt_golden_fixed_schedule():
+    """Exact rendering of a hand-built two-unit trace: symbols follow
+    span insertion order, overlapping distinct kernels collapse to
+    ``*``, the header carries the makespan and per-column unit label,
+    and instants list below the legend."""
+    tr = ScheduleTrace(label="g")
+    tr.span(0, "a", 0.0, 1.0)
+    tr.span(0, "b", 1.0, 2.0)
+    tr.span(1, "c", 0.0, 2.0)
+    tr.span(1, "d", 0.5, 1.0)
+    tr.instant("round", 2.0)
+    assert tr.gantt(width=8) == (
+        "g  (makespan 2s, 1 col = 0.25s)\n"
+        "unit  0 |aaaabbbb|\n"
+        "unit  1 |cc**cccc|\n"
+        "legend: a=a, b=b, c=c, d=d\n"
+        "  @2s [device] round")
+
+
+def test_gantt_width_clamping():
+    """A zero-width span sitting exactly at the makespan still renders
+    one cell, clamped inside the chart; every row is exactly the asked
+    width regardless of rounding."""
+    tr = ScheduleTrace(label="clamp")
+    tr.span(0, "a", 0.0, 2.0)
+    tr.span(0, "z", 2.0, 2.0)      # degenerate span at the right edge
+    text = tr.gantt(width=8)
+    row = next(ln for ln in text.splitlines() if ln.startswith("unit"))
+    assert row == "unit  0 |aaaaaaa*|"
+    for w in (1, 3, 72):
+        for ln in tr.gantt(width=w).splitlines():
+            if ln.startswith("unit"):
+                assert len(ln) == len("unit  0 ||") + w
+
+
+def test_gantt_empty_trace_and_instant_only():
+    assert ScheduleTrace().gantt() == "(empty trace)"
+    tr = ScheduleTrace()
+    tr.instant("round", 1.0)       # events but no residency
+    assert tr.gantt() == "(empty trace)"
+
+
 # --------------------------------------------------------------------------
 # MetricsRegistry
 # --------------------------------------------------------------------------
@@ -331,6 +376,48 @@ def test_phase_breakdown_covers_all_phases():
     assert set(pb) == set(PHASES)
     assert pb["compose"] == {"calls": 1, "total_s": 0.5, "mean_s": 0.5}
     assert pb["execute"]["calls"] == 0
+
+
+def test_histogram_reservoir_quantiles():
+    """PR 9: histograms keep a seeded fixed-size reservoir, so
+    snapshots carry p50/p95/p99 without storing every observation.
+    Under the reservoir size the quantiles are exact."""
+    m = MetricsRegistry()
+    h = m.histogram("request_latency_s")
+    for v in range(1, 101):           # 1..100, well under the reservoir
+        h.observe(float(v))
+    snap = m.snapshot()
+    assert snap["request_latency_s.p50_s"] == pytest.approx(50.0, abs=1.5)
+    assert snap["request_latency_s.p95_s"] == pytest.approx(95.0, abs=1.5)
+    assert snap["request_latency_s.p99_s"] == pytest.approx(99.0, abs=1.5)
+    # pre-existing snapshot keys are unchanged by the satellite
+    assert snap["request_latency_s.count"] == 100
+    assert snap["request_latency_s.mean_s"] == pytest.approx(50.5)
+    assert snap["request_latency_s.min_s"] == 1.0
+    assert snap["request_latency_s.max_s"] == 100.0
+
+
+def test_histogram_reservoir_is_deterministic():
+    """Over-full reservoirs subsample with a per-series seeded RNG
+    (crc32 of the name, not the salted ``hash``), so two registries
+    fed the identical stream report identical quantiles — and so does
+    the same registry after a reset."""
+    def fill(h):
+        for v in range(5000):
+            h.observe((v * 37 % 5000) / 5000.0)
+
+    a, b = MetricsRegistry(), MetricsRegistry()
+    fill(a.histogram("phase_compose"))
+    fill(b.histogram("phase_compose"))
+    ka = {k: v for k, v in a.snapshot().items() if ".p" in k}
+    kb = {k: v for k, v in b.snapshot().items() if ".p" in k}
+    assert ka == kb and ka
+    # quantiles of a uniform stream land near the ideal even once the
+    # reservoir is subsampling 5000 >> 256 points
+    assert ka["phase_compose.p50_s"] == pytest.approx(0.5, abs=0.1)
+    a.reset()
+    fill(a.histogram("phase_compose"))
+    assert {k: v for k, v in a.snapshot().items() if ".p" in k} == ka
 
 
 def test_metric_classes_standalone():
@@ -503,3 +590,99 @@ def test_engine_batched_refine_backend_records_metrics():
     snap = stats["metrics"]
     assert snap["refine_evals"] >= 1
     assert snap["refine_score_s.count"] >= 1
+
+
+# --------------------------------------------------------------------------
+# export layer (PR 9): Prometheus exposition + JSONL flight recorder
+# --------------------------------------------------------------------------
+
+def _random_registry(rng: random.Random) -> MetricsRegistry:
+    m = MetricsRegistry()
+    for i in range(rng.randint(1, 5)):
+        m.counter("cache_hits", namespace=rng.choice(["flat", "dag"])
+                  ).inc(rng.randint(0, 50))
+    m.counter("engine_steps").inc(rng.randint(1, 9))
+    m.gauge("cache_entries").set(rng.uniform(0, 100))
+    h = m.histogram("phase_compose")
+    for _ in range(rng.randint(1, 40)):
+        h.observe(rng.uniform(1e-6, 2.0))
+    m.histogram("audit_quality_percentile",
+                arch="qwen1.5-0.5b", kind="refined").observe(
+                    rng.uniform(0, 100))
+    return m
+
+
+def test_prometheus_roundtrip_property():
+    """Seeded property: every counter/gauge sample and every histogram
+    sum/count survive the text exposition bit-exactly (%.17g), and
+    quantile samples match the reservoir's answer."""
+    rng = random.Random(29)
+    for _ in range(10):
+        m = _random_registry(rng)
+        text = prometheus_text(m)
+        parsed = parse_prometheus_text(text)
+        snap = m.snapshot()
+        for key, v in snap.items():
+            name, _, field = key.partition(".")
+            if not field:                       # counter / gauge
+                # snapshot key {k=v} -> exposition key {k="v"}
+                pk = "repro_" + re.sub(r"=([^,}]*)", r'="\1"', name)
+                assert parsed[pk] == v, key
+        h = m.histogram("phase_compose")
+        assert parsed["repro_phase_compose_count"] == h.count
+        assert parsed["repro_phase_compose_sum"] == pytest.approx(
+            h.total, rel=1e-15)
+        assert parsed['repro_phase_compose{quantile="0.5"}'] == \
+            h.quantile(0.5)
+
+
+def test_prometheus_text_structure():
+    m = MetricsRegistry()
+    m.counter("cache_hits", namespace="flat").inc(3)
+    m.gauge("cache_entries").set(2)
+    m.histogram("phase_compose").observe(0.5)
+    text = prometheus_text(m)
+    assert "# TYPE repro_cache_hits counter" in text
+    assert "# TYPE repro_cache_entries gauge" in text
+    assert "# TYPE repro_phase_compose summary" in text
+    assert 'repro_cache_hits{namespace="flat"} 3' in text
+    assert "repro_phase_compose_count 1" in text
+    # one TYPE header per base metric, even with several labelled series
+    m.counter("cache_hits", namespace="dag").inc()
+    text = prometheus_text(m)
+    assert text.count("# TYPE repro_cache_hits counter") == 1
+
+
+def test_flight_recorder_roundtrip_and_timeline(tmp_path):
+    rng = random.Random(31)
+    rec = FlightRecorder()
+    kinds = ("schedule", "cache", "audit", "rebuild")
+    want = []
+    for i in range(rng.randint(5, 40)):
+        kind = rng.choice(kinds)
+        fields = {"step": i, "ok": rng.random() < 0.5,
+                  "ratio": rng.uniform(0, 2)}
+        rec.event(kind, **fields)
+        want.append({"seq": i, "kind": kind, **fields})
+    assert rec.events == want
+    # text round-trip
+    assert FlightRecorder.load(rec.to_jsonl()) == want
+    # file round-trip
+    p = tmp_path / "flight.jsonl"
+    rec.dump(str(p))
+    assert FlightRecorder.load(str(p)) == want
+    tl = FlightRecorder.timeline(want)
+    assert tl["n_events"] == len(want)
+    assert sum(tl["by_kind"].values()) == len(want)
+    assert len(tl["lines"]) == len(want)
+    assert tl["lines"][0].startswith("#0 ")
+
+
+def test_flight_recorder_caps_events():
+    rec = FlightRecorder(max_events=10)
+    for i in range(25):
+        rec.event("schedule", step=i)
+    assert len(rec.events) == 10
+    assert rec.dropped == 15
+    assert rec.events[0]["step"] == 15      # FIFO drop, newest kept
+    assert rec.events[-1]["seq"] == 24      # seq keeps counting
