@@ -88,11 +88,31 @@ _TRACE_OVERHEAD = 1.10
 #: that degrades it to K full simulations per audit shows up here)
 _AUDIT_OVERHEAD = 1.15
 
+#: ceiling on the frontend / bare-synchronous wall-time ratio over the
+#: same request set with every arrival at t=0 (saturation: the queue
+#: is never empty, so admission-control costing, routing and the
+#: virtual-clock event loop all run on every dispatch).  PR 10's front
+#: end is bookkeeping around the same ``engine.step()`` calls, so it
+#: must stay within 15% of the bare loop — an admission scan that went
+#: quadratic-expensive or a per-dispatch recompose shows up here.
+_FRONTEND_OVERHEAD = 1.15
+
 #: the PR 7 package split re-exports the historical flat import
 #: surface; a rename that silently drops one of these breaks every
 #: external consumer, so the guard imports them by name
 _SERVE_SURFACE = ("Request", "ScheduleCache", "SchedulerPolicy",
                   "ServingEngine", "Signature")
+
+#: PR 10 async-serving surface, same discipline per module
+_FRONTEND_SURFACE = {
+    "repro.serve": ("ServingFrontend", "AdmissionPolicy",
+                    "VirtualClock", "LoadGenerator", "make_workload"),
+    "repro.serve.frontend": ("ServingFrontend", "AdmissionPolicy",
+                             "VirtualClock"),
+    "repro.serve.loadgen": ("LoadGenerator", "make_workload",
+                            "poisson_arrivals", "bursty_arrivals",
+                            "diurnal_arrivals"),
+}
 
 
 def trace_overhead_ratio(*, repeats: int = 7, inner: int | None = None,
@@ -227,15 +247,86 @@ def audit_overhead_ratio(*, repeats: int = 7, inner: int | None = None,
             "ratio": t_on / max(t_off, 1e-12)}
 
 
+def frontend_overhead_ratio(*, repeats: int = 7,
+                            inner: int | None = None,
+                            min_sample_s: float = 0.05,
+                            n_requests: int = 6) -> dict:
+    """Wall-time ratio of the async front end vs the bare synchronous
+    ``ServingEngine`` loop over the *same request set* at saturation
+    (every arrival at virtual t=0, so the arrival queue is never empty
+    and admission costing + routing + the event loop run on every
+    dispatch).
+
+    Engines are built and jit-warmed *outside* the timed region (a
+    fresh engine recompiles its decode step; both sides would pay it,
+    but it would drown the bookkeeping delta this gate exists to
+    bound).  Interleaved best-of-``repeats`` with the sample stretched
+    to at least ``min_sample_s`` like the other overhead gates."""
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.serve import (AdmissionPolicy, Request, SchedulerPolicy,
+                             ServingEngine, ServingFrontend)
+
+    cfg = get_config("qwen1.5-0.5b", "smoke")
+    params = T.init(jax.random.PRNGKey(0), cfg)
+
+    def mk_engine() -> ServingEngine:
+        eng = ServingEngine(cfg, params, max_len=32,
+                            policy=SchedulerPolicy())
+        # jit-warm with a throwaway request (compile out of the timing)
+        eng.submit([Request(-1, np.zeros(2, np.int32),
+                            max_new_tokens=1)])
+        eng.run()
+        return eng
+
+    def mk_reqs() -> list[Request]:
+        rng = np.random.default_rng(0)
+        return [Request(i, rng.integers(0, 128, size=4).astype(np.int32),
+                        max_new_tokens=4) for i in range(n_requests)]
+
+    def once(front: bool, n: int = 1) -> float:
+        engines = [mk_engine() for _ in range(n)]
+        batches = [mk_reqs() for _ in range(n)]
+        t0 = time.perf_counter()
+        for eng, batch in zip(engines, batches):
+            if front:
+                fe = ServingFrontend(
+                    [eng], AdmissionPolicy(round_cost_budget_s=1.0))
+                fe.run([(0.0, r) for r in batch])
+            else:
+                eng.submit(batch)
+                eng.run()
+        return time.perf_counter() - t0
+
+    warm = once(False)                # warm caches on neither side
+    if inner is None:
+        inner = max(1, int(math.ceil(min_sample_s / max(warm, 1e-6))))
+    t_off = t_on = float("inf")
+    for _ in range(max(repeats, 1)):
+        t_off = min(t_off, once(False, inner))
+        t_on = min(t_on, once(True, inner))
+    return {"wall_off_s": t_off, "wall_on_s": t_on, "inner": inner,
+            "n_requests": n_requests,
+            "ratio": t_on / max(t_off, 1e-12)}
+
+
 def _surface_regressions() -> list[str]:
     out = []
-    for mod in ("repro.serve", "repro.serve.engine"):
+    surfaces = {"repro.serve": _SERVE_SURFACE,
+                "repro.serve.engine": _SERVE_SURFACE}
+    for mod, names in list(surfaces.items()) + \
+            list(_FRONTEND_SURFACE.items()):
         try:
-            m = __import__(mod, fromlist=list(_SERVE_SURFACE))
+            m = __import__(mod, fromlist=list(names))
         except ImportError as e:
             out.append(f"import surface: {mod} failed to import ({e})")
             continue
-        for name in _SERVE_SURFACE:
+        for name in names:
             if not hasattr(m, name):
                 out.append(f"import surface: {mod}.{name} is gone")
     return out
@@ -299,6 +390,13 @@ def main(argv=None) -> int:
                          "audit_frac=0.05 (0 disables; interleaved "
                          "best-of-k on this box, no committed "
                          "baseline needed)")
+    ap.add_argument("--frontend-overhead", type=float,
+                    default=_FRONTEND_OVERHEAD,
+                    help="ceiling on the async-frontend/bare-engine "
+                         "wall-time ratio over the same request set "
+                         "at saturation arrival rate (0 disables; "
+                         "interleaved best-of-k on this box, no "
+                         "committed baseline needed)")
     ap.add_argument("--quick", action="store_true",
                     help="skip the slow oracle/full baselines entirely "
                          "(fresh run measures only the guarded cells)")
@@ -363,6 +461,16 @@ def main(argv=None) -> int:
                 f"{au['wall_off_s'] * 1e3:.1f} ms, "
                 f"{au['audits_per_sample']} audits/sample) > ceiling "
                 f"{args.audit_overhead:.2f}x")
+    if args.frontend_overhead > 0:
+        fr = frontend_overhead_ratio()
+        if fr["ratio"] > args.frontend_overhead:
+            regressions.append(
+                f"async-frontend overhead: saturated dispatch loop "
+                f"{fr['ratio']:.3f}x the bare synchronous engine "
+                f"({fr['wall_on_s'] * 1e3:.1f} ms vs "
+                f"{fr['wall_off_s'] * 1e3:.1f} ms over "
+                f"{fr['n_requests']} requests) > ceiling "
+                f"{args.frontend_overhead:.2f}x")
     if regressions:
         print("\nREGRESSION: construction wall time exceeded "
               f"{args.threshold:.2f}x the committed baseline:")

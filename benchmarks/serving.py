@@ -34,7 +34,12 @@ composition time vs an uncached run of the same workload).  A fourth
 through the *online* :class:`repro.obs.QualityAuditor` on the traced
 arch workloads at four cores — the acceptance gate that served
 refined compositions land at or above the 90th percentile of 50
-seeded random topological orders.
+seeded random topological orders.  A fifth (``frontend_bench``, PR 10)
+drives the async continuous-batching front end
+(``repro.serve.frontend``) with seeded Poisson/bursty/diurnal arrivals
+on its virtual clock and reports p50/p99 request latency, goodput and
+rejection rate per traced arch — with frontend-served tokens asserted
+bit-identical to the synchronous ``step()`` baseline.
 
 ``python benchmarks/serving.py`` writes every section to
 ``BENCH_serving.json``.
@@ -54,7 +59,8 @@ from repro.core.tpu import (decode_profile, fifo_rounds,
                             round_time)
 
 __all__ = ["run", "simulate_load", "engine_cache_stats",
-           "kv_bucket_sweep", "churn_compose_bench", "audit_bench"]
+           "kv_bucket_sweep", "churn_compose_bench", "audit_bench",
+           "frontend_bench"]
 
 #: budget for the refine_model axis rows (full-simulation equivalents;
 #: the event model delta path stretches this ~10x in effective moves)
@@ -596,6 +602,65 @@ def audit_bench(*, k: int = 50, seed: int = 0, max_stages: int = 16,
     return out
 
 
+def frontend_bench(*, n_requests: int = 8, rate: float = 1e6,
+                   seed: int = 0, n_replicas: int = 2,
+                   print_fn=print) -> list[dict]:
+    """Async serving front end vs the synchronous baseline (PR 10).
+
+    Drives all three traced archs (smoke size) with seeded
+    Poisson/bursty/diurnal arrival processes through
+    ``repro.serve.frontend`` — cost-modelled admission, cache-aware
+    routing over ``n_replicas`` engine replicas, virtual clock — and
+    reports p50/p99 request latency, queue depth, goodput and
+    rejection rate per (arch, process) cell.  Every cell also replays
+    the identical request set through a bare synchronous
+    ``ServingEngine.step()`` loop and records
+    ``tokens_bit_identical``: the front end may reorder and batch, but
+    must not change a single served token.  All latency numbers are in
+    *virtual* (modelled roofline) seconds — deterministic by seed, so
+    this section is byte-stable in ``BENCH_serving.json``.
+    """
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.serve import (LoadGenerator, SchedulerPolicy,
+                             ServingEngine, ServingFrontend)
+
+    out = []
+    print_fn("# Async front end (virtual clock, smoke archs, "
+             f"{n_replicas} replicas)")
+    print_fn("arch,process,completed,p50_us,p99_us,goodput_rps,"
+             "reject_rate,identical")
+    for arch in ("qwen1.5-0.5b", "mixtral-8x7b", "deepseek-v2-236b"):
+        cfg = get_config(arch, "smoke")
+        params = T.init(jax.random.PRNGKey(0), cfg)
+        for process in ("poisson", "bursty", "diurnal"):
+            gen = LoadGenerator(process=process, n_requests=n_requests,
+                                rate=rate, seed=seed,
+                                max_new_tokens=(2, 4))
+            fe = ServingFrontend.build(cfg, params,
+                                       n_replicas=n_replicas,
+                                       max_len=32,
+                                       policy=SchedulerPolicy())
+            rep = gen.drive(fe)
+            sync = ServingEngine(cfg, params, max_len=32,
+                                 policy=SchedulerPolicy())
+            sync.submit([r for _, r in gen.workload()])
+            rep["arch"] = arch
+            rep["n_replicas"] = n_replicas
+            rep["tokens_bit_identical"] = bool(
+                fe.outputs() == sync.run()["outputs"])
+            out.append(rep)
+            print_fn(f"{arch},{process},{rep['completed']},"
+                     f"{rep['p50_s'] * 1e6:.3f},"
+                     f"{rep['p99_s'] * 1e6:.3f},"
+                     f"{rep['goodput_rps']:.0f},"
+                     f"{rep['rejection_rate']:.3f},"
+                     f"{rep['tokens_bit_identical']}")
+    return out
+
+
 #: the refine_model axis rides along with the classic three policies
 _POLICIES = ("fifo", "symbiotic", "refined", "refined-round",
              "refined-event")
@@ -603,7 +668,7 @@ _POLICIES = ("fifo", "symbiotic", "refined", "refined-round",
 
 def run(print_fn=print, with_engine: bool = True,
         with_kv_sweep: bool = True, with_churn: bool = True,
-        with_audit: bool = True) -> dict:
+        with_audit: bool = True, with_frontend: bool = True) -> dict:
     print_fn("# Symbiotic continuous batching (7B cost model, v5e)")
     print_fn("mix,policy,rounds,time_ms,tok_per_s,speedup_vs_fifo")
     mixes = []
@@ -630,6 +695,8 @@ def run(print_fn=print, with_engine: bool = True,
         out["churn"] = churn_compose_bench(print_fn=print_fn)
     if with_audit:
         out["audit"] = audit_bench(print_fn=print_fn)
+    if with_frontend:
+        out["frontend_bench"] = frontend_bench(print_fn=print_fn)
     return out
 
 
@@ -645,11 +712,15 @@ def main(argv=None) -> int:
     ap.add_argument("--no-audit", action="store_true",
                     help="skip the online Fig.-1 quality audit of "
                          "served refined compositions")
+    ap.add_argument("--no-frontend", action="store_true",
+                    help="skip the async front-end load-generator "
+                         "section (virtual-clock latency report)")
     args = ap.parse_args(argv)
     out = run(with_engine=not args.no_engine,
               with_kv_sweep=not args.no_engine,
               with_churn=not args.no_churn,
-              with_audit=not args.no_audit)
+              with_audit=not args.no_audit,
+              with_frontend=not args.no_frontend)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {args.out}")

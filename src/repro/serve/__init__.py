@@ -3,16 +3,25 @@
 A package since PR 7: :mod:`.engine` (step loop + exact execution),
 :mod:`.composer` (the per-step composition pipeline), :mod:`.cache`
 (the namespaced ScheduleCache), :mod:`.live` (cross-step incremental
-composition).  The historical flat import surface is preserved here
-and in :mod:`.engine`.
+composition).  PR 10 adds the async layer: :mod:`.frontend` (arrival
+queue, cost-modelled admission control, continuous-batching dispatch
+over engine replicas on a virtual clock) and :mod:`.loadgen` (seeded
+Poisson/bursty/diurnal load generation).  The historical flat import
+surface is preserved here and in :mod:`.engine`.
 """
 
 from .cache import ScheduleCache, Signature
 from .composer import Composer, GatedGuard
 from .engine import (Request, SchedulerPolicy, ServingEngine,
                      build_dag_triples)
+from .frontend import AdmissionPolicy, ServingFrontend, VirtualClock
 from .live import LiveComposition
+from .loadgen import (ARRIVAL_PROCESSES, LoadGenerator, bursty_arrivals,
+                      diurnal_arrivals, make_workload, poisson_arrivals)
 
 __all__ = ["Request", "ScheduleCache", "SchedulerPolicy",
            "ServingEngine", "Signature", "Composer", "GatedGuard",
-           "LiveComposition", "build_dag_triples"]
+           "LiveComposition", "build_dag_triples",
+           "AdmissionPolicy", "ServingFrontend", "VirtualClock",
+           "ARRIVAL_PROCESSES", "LoadGenerator", "bursty_arrivals",
+           "diurnal_arrivals", "make_workload", "poisson_arrivals"]

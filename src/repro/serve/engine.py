@@ -248,7 +248,7 @@ class ServingEngine:
                  n_params: float | None = None,
                  policy: SchedulerPolicy | None = None,
                  device=None, metrics: MetricsRegistry | None = None,
-                 trace=None, recorder=None):
+                 trace=None, recorder=None, schedule_cache=None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -279,8 +279,16 @@ class ServingEngine:
         #: ``trace``: tokens and modelled times are bit-identical
         #: with and without it.
         self.recorder = recorder
-        self.schedule_cache = ScheduleCache(
-            kv_bucket=self.policy.kv_bucket, metrics=self.metrics)
+        #: PR 10: a pre-built :class:`ScheduleCache` may be injected so
+        #: several engine replicas behind ``repro.serve.frontend`` share
+        #: one pattern store (cache-aware routing then pays off across
+        #: replicas).  An injected cache keeps its *own* metrics
+        #: registry — its counters and the composer's guard/refine
+        #: timers land there, not in this engine's registry.
+        self.schedule_cache = (
+            schedule_cache if schedule_cache is not None else
+            ScheduleCache(kv_bucket=self.policy.kv_bucket,
+                          metrics=self.metrics))
         self.composer = Composer(self.policy, self.device,
                                  self.weights_bytes,
                                  self.schedule_cache,

@@ -1,0 +1,77 @@
+"""Seeded property-test harness shim (PR 10).
+
+The toolchain pins no ``hypothesis`` build (carried-over ROADMAP
+item), so property-style tests here use plain :mod:`random` under a
+seeded ``@cases`` decorator.  Bodies are written hypothesis-shaped —
+they take a single ``rng`` argument and draw everything from it — so
+they port directly when the pin lands.
+
+Porting map (``proptest`` → ``hypothesis``)::
+
+    @cases(n=50, seed=7)              @settings(max_examples=50,
+    def test_x(rng):              →              derandomize=True)
+        k = rng.randint(1, 9)         @given(rng=st.randoms(
+        ...                               use_true_random=False))
+                                      def test_x(rng):
+                                          k = rng.randint(1, 9)
+                                          ...
+
+i.e. ``cases(n=N)`` ≙ ``settings(max_examples=N)``; the injected
+seeded ``random.Random`` ≙ ``st.randoms()``; per-case seeds are
+derived deterministically from ``seed`` so failures reproduce by
+case index (the decorator reports the failing case's seed, the
+counterpart of hypothesis' falsifying-example output).  Draws inside
+bodies already use only the ``random.Random`` API surface
+(``randint`` / ``randrange`` / ``random`` / ``choice`` / ``shuffle``)
+that ``st.randoms()`` provides.
+
+Not collected by pytest (no ``test_`` prefix); import it from test
+modules: ``from proptest import cases``.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+__all__ = ["cases", "case_seed"]
+
+#: multiplier separating per-suite seed streams; any odd constant
+#: works, a large prime keeps neighbouring suites' streams disjoint.
+_SEED_STRIDE = 1_000_003
+
+
+def case_seed(seed: int, i: int) -> int:
+    """The derived seed of case ``i`` under base ``seed`` — exposed so
+    a failing case can be re-run standalone."""
+    return seed * _SEED_STRIDE + i
+
+
+def cases(n: int = 25, seed: int = 0):
+    """Run the decorated test body ``n`` times, each with a fresh
+    deterministically-seeded ``random.Random`` passed as ``rng``.
+
+    On failure, re-raises with the case index and derived seed
+    prepended so the case reproduces standalone via
+    ``random.Random(case_seed(seed, i))``.
+    """
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kw):
+            for i in range(n):
+                s = case_seed(seed, i)
+                try:
+                    fn(*args, rng=random.Random(s), **kw)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"case {i}/{n} (seed {s}): {e}") from e
+        # hide ``rng`` from pytest's fixture resolution (hypothesis'
+        # @given does the same for its injected arguments)
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name != "rng"])
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

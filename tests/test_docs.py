@@ -96,6 +96,7 @@ def test_architecture_names_cover_scheduling_packages():
                 "repro.slice.graph", "repro.slice.constrained",
                 "repro.serve.engine", "repro.serve.composer",
                 "repro.serve.cache", "repro.serve.live",
+                "repro.serve.frontend", "repro.serve.loadgen",
                 "repro.obs.trace", "repro.obs.metrics",
                 "repro.obs.profile", "repro.obs.audit",
                 "repro.obs.latency", "repro.obs.export"):

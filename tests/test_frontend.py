@@ -1,0 +1,275 @@
+"""Frontend property suite (PR 10).
+
+Admission-control invariants (the modelled-cost budget is never
+exceeded; deferred requests are never starved), frontend-vs-synchronous
+token bit-identity on all three traced archs, replica-routing
+determinism, cache-stats conservation across replicas, and the
+satellite-4 pin: audit sampling keys on **engine-local** step counts
+(each replica's own ``QualityAuditor``), not global dispatch ticks,
+and the :class:`FlightRecorder` receives per-dispatch
+``frontend_step`` events carrying both counters.
+
+Calibration note: under the round cost model a round's time is
+dominated by the weight stream (charged once per round), so admission
+pressure is created by *round count*, not item count — the churn tests
+use a ``token_budget``-constrained device so a few in-flight prompts
+already overflow into extra rounds, and virtual arrival rates around
+``1e6`` so seeded Poisson gaps (~1e-6 s) undercut modelled step times
+(~1e-5 s).  Virtual seconds are arbitrary units; only these ratios
+matter.
+"""
+
+import jax
+import pytest
+
+from proptest import cases
+from repro.configs import get_config
+from repro.core.tpu import make_serving_device
+from repro.models import transformer as T
+from repro.obs import FlightRecorder, QualityAuditor
+from repro.serve import (AdmissionPolicy, SchedulerPolicy, ServingEngine,
+                         ServingFrontend, make_workload)
+
+pytestmark = pytest.mark.frontend
+
+ARCHS = ("qwen1.5-0.5b", "mixtral-8x7b", "deepseek-v2-236b")
+_PARAMS_CACHE: dict = {}
+#: high virtual arrival rate: gaps ~1e-6 s vs modelled steps ~1e-5 s,
+#: so arrivals genuinely queue behind in-flight work.
+_RATE = 1e6
+
+
+def _cfg_params(arch: str):
+    if arch not in _PARAMS_CACHE:
+        cfg = get_config(arch, "smoke")
+        _PARAMS_CACHE[arch] = (cfg, T.init(jax.random.PRNGKey(0), cfg))
+    return _PARAMS_CACHE[arch]
+
+
+def _tiny_device():
+    """~10 prompt tokens per round: admission cost climbs one round
+    per couple of live prompts."""
+    return make_serving_device(token_budget=10)
+
+
+def _frontend(arch: str = "qwen1.5-0.5b", *, n_replicas: int = 1,
+              policy: SchedulerPolicy | None = None,
+              admission: AdmissionPolicy | None = None,
+              shared_cache: bool = False, recorder=None, device=None):
+    cfg, params = _cfg_params(arch)
+    return ServingFrontend.build(
+        cfg, params, n_replicas=n_replicas, max_len=32,
+        policy=policy or SchedulerPolicy(), admission=admission,
+        shared_cache=shared_cache, recorder=recorder, device=device)
+
+
+def _budget(fe: ServingFrontend, workload, slack: float):
+    """``slack`` multiples of the cheapest solo round cost (all solos
+    are ~one weight-stream round, so slack≈1.x admits roughly one
+    round's worth of work at a time)."""
+    return slack * min(fe.solo_cost_s(0, r) for _, r in workload)
+
+
+# --------------------------------------------------------------------------
+# admission invariants
+# --------------------------------------------------------------------------
+
+def test_admission_never_exceeds_budget():
+    """Every admit event's modelled next-step cost (the fifo-packed
+    round_time of the replica's live items plus the candidate) is
+    within the budget — the invariant, read off the recorder."""
+    wl = make_workload("poisson", 10, _RATE, seed=3, prompt_len=(3, 8))
+    probe = _frontend(device=_tiny_device())
+    budget = _budget(probe, wl, slack=1.25)
+    rec = FlightRecorder()
+    fe = _frontend(device=_tiny_device(), recorder=rec,
+                   admission=AdmissionPolicy(round_cost_budget_s=budget,
+                                             max_defer=4))
+    fe.run(wl)
+    admits = [e for e in rec.events if e["kind"] == "admit"]
+    defers = [e for e in rec.events if e["kind"] == "defer"]
+    assert admits, "workload admitted nothing"
+    assert defers, "budget not tight enough to exercise deferral"
+    for e in admits:
+        assert e["est_with"] <= e["budget"] + 1e-12, e
+    assert fe.stats()["latency"]["completed"] == len(admits)
+
+
+@cases(n=3, seed=11)
+def test_deferred_never_starved(rng):
+    """Bounded wait under seeded Poisson churn: a request deferred
+    ``max_defer`` times blocks the queue — no younger request is
+    admitted past it — and every admitted request completes."""
+    seed = rng.randrange(1 << 16)
+    wl = make_workload("poisson", 10, _RATE, seed=seed,
+                       prompt_len=(3, 8))
+    probe = _frontend(device=_tiny_device())
+    rec = FlightRecorder()
+    fe = _frontend(device=_tiny_device(), recorder=rec,
+                   admission=AdmissionPolicy(
+                       round_cost_budget_s=_budget(probe, wl, 1.25),
+                       max_defer=2))
+    st = fe.run(wl)
+    # completion: everything not rejected finishes its full budget
+    outs = fe.outputs()
+    assert len(outs) == st["admitted"] == st["submitted"] - st["rejected"]
+    by_rid = {r.rid: r for _, r in wl}
+    for rid, toks in outs.items():
+        assert len(toks) == by_rid[rid].max_new_tokens
+    # ordering: once rid b is blocked (deferrals hit max_defer), every
+    # later admit until b's own is for a request AHEAD of b in FIFO
+    # (rids increase with arrival order in make_workload).
+    blocked: set[int] = set()
+    for e in rec.events:
+        if e["kind"] == "defer" and e["deferrals"] >= 2:
+            blocked.add(e["rid"])
+        elif e["kind"] == "admit":
+            blocked.discard(e["rid"])
+            for b in blocked:
+                assert e["rid"] < b, (
+                    f"rid {e['rid']} admitted past blocked {b}")
+    assert not blocked, "blocked requests never admitted (starved)"
+
+
+def test_oversized_and_queue_full_rejections():
+    probe = _frontend(device=_tiny_device())
+    wl = make_workload("bursty", 6, _RATE, seed=5, prompt_len=(5, 5))
+    solo = min(probe.solo_cost_s(0, r) for _, r in wl)
+    # budget below every solo cost: nothing can ever be admitted
+    fe = _frontend(device=_tiny_device(),
+                   admission=AdmissionPolicy(
+                       round_cost_budget_s=0.5 * solo))
+    st = fe.run(wl)
+    assert st["rejected"] == st["submitted"] == 6
+    assert st["rejection_rate"] == 1.0 and fe.outputs() == {}
+    m = fe.metrics
+    assert int(m.counter("frontend_rejected",
+                         reason="oversized").value) == 6
+    # depth-1 queue under a burst with a one-round budget: the head
+    # defers while the replica is busy, so the burst overflows
+    fe2 = _frontend(device=_tiny_device(),
+                    admission=AdmissionPolicy(
+                        round_cost_budget_s=1.05 * solo,
+                        max_queue_depth=1))
+    st2 = fe2.run(make_workload("bursty", 6, _RATE, seed=5,
+                                prompt_len=(5, 5)))
+    qf = int(fe2.metrics.counter("frontend_rejected",
+                                 reason="queue_full").value)
+    assert qf > 0
+    assert st2["admitted"] + st2["rejected"] == st2["submitted"]
+    assert len(fe2.outputs()) == st2["admitted"]
+
+
+# --------------------------------------------------------------------------
+# bit-identity, routing determinism, cache conservation
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_tokens_bit_identical_vs_synchronous(arch):
+    """Frontend-served tokens equal the synchronous ``step()`` loop's
+    on the traced incremental path (joins/retires through the
+    LiveComposition frontier) — execution is exact per request, so
+    reordering and admission must not change a single token."""
+    cfg, params = _cfg_params(arch)
+    policy = SchedulerPolicy(respect_deps=True,
+                             composition="incremental")
+    fe = ServingFrontend.build(cfg, params, n_replicas=2, max_len=32,
+                               policy=policy)
+    fe.run(make_workload("poisson", 6, _RATE, seed=9,
+                         max_new_tokens=(2, 4)))
+    sync = ServingEngine(cfg, params, max_len=32,
+                         policy=SchedulerPolicy(
+                             respect_deps=True, composition="batch"))
+    sync.submit([r for _, r in make_workload(
+        "poisson", 6, _RATE, seed=9, max_new_tokens=(2, 4))])
+    assert fe.outputs() == sync.run()["outputs"]
+
+
+def test_replica_routing_determinism():
+    """Same seed, fresh pool: identical (rid → replica) assignment
+    sequence and identical virtual-time stats, twice over."""
+    def one():
+        rec = FlightRecorder()
+        fe = _frontend(n_replicas=2, device=_tiny_device(),
+                       recorder=rec)
+        st = fe.run(make_workload("bursty", 8, _RATE, seed=21,
+                                  prompt_len=(3, 8)))
+        picks = [(e["rid"], e["replica"]) for e in rec.events
+                 if e["kind"] == "admit"]
+        return picks, st
+
+    picks_a, st_a = one()
+    picks_b, st_b = one()
+    assert picks_a and picks_a == picks_b
+    assert st_a == st_b
+
+
+def test_cache_stats_conservation_across_replicas():
+    """Flat-path lookups are conserved: one lookup per dispatched
+    step, whether each replica keeps its own ScheduleCache or the
+    pool shares one — and tokens are identical either way."""
+    adm = AdmissionPolicy(route="round_robin")
+    fe = _frontend(n_replicas=2, admission=adm)
+    fe.run(make_workload("poisson", 8, _RATE, seed=13))
+    for i, eng in enumerate(fe.engines):
+        s = eng.schedule_cache.stats()
+        assert s["hits"] + s["misses"] == fe._steps[i]
+
+    fe2 = _frontend(n_replicas=2, shared_cache=True, admission=adm)
+    fe2.run(make_workload("poisson", 8, _RATE, seed=13))
+    assert fe2.engines[0].schedule_cache is fe2.engines[1].schedule_cache
+    shared = fe2.engines[0].schedule_cache.stats()
+    assert shared["hits"] + shared["misses"] == sum(fe2._steps)
+    assert fe2.outputs() == fe.outputs()
+
+
+def test_cache_affinity_routes_same_signature_together():
+    """Identical prefill signatures land on one replica (warm
+    pattern store), pinned via the sticky map."""
+    rec = FlightRecorder()
+    fe = _frontend(n_replicas=2, recorder=rec,
+                   admission=AdmissionPolicy(route="cache_affinity"))
+    fe.run(make_workload("poisson", 8, _RATE, seed=2,
+                         prompt_len=(5, 5)))   # one signature for all
+    picks = {e["replica"] for e in rec.events if e["kind"] == "admit"}
+    assert len(picks) == 1
+
+
+# --------------------------------------------------------------------------
+# satellite 4: engine-local audit keying + frontend_step events
+# --------------------------------------------------------------------------
+
+def test_audit_sampling_keys_on_engine_local_steps():
+    """With two replicas at ``audit_frac=0.5``, each replica audits
+    per *its own* step count (the PR 3 integer-crossing rule over the
+    engine-local counter) — not per global dispatch tick."""
+    policy = SchedulerPolicy(audit_frac=0.5, audit_k=3)
+    fe = _frontend(n_replicas=2, policy=policy,
+                   admission=AdmissionPolicy(route="round_robin"))
+    fe.run(make_workload("poisson", 8, _RATE, seed=7))
+    assert all(s > 0 for s in fe._steps), "need both replicas stepping"
+    total_ticks = fe._tick
+    for i, eng in enumerate(fe.engines):
+        seen = eng.composer.auditor._steps_seen
+        assert seen == fe._steps[i] < total_ticks
+        expected = sum(QualityAuditor.crossed(s, 0.5)
+                       for s in range(1, seen + 1))
+        audited = int(eng.metrics.counter("audit_steps").value)
+        assert audited == expected
+
+
+def test_frontend_step_events_carry_both_counters():
+    """Every dispatch emits one ``frontend_step`` event with the
+    global ``tick`` and the replica's engine-local ``engine_step``;
+    per replica the latter is the contiguous sequence 1..steps."""
+    rec = FlightRecorder()
+    fe = _frontend(n_replicas=2, recorder=rec,
+                   admission=AdmissionPolicy(route="round_robin"))
+    fe.run(make_workload("poisson", 6, _RATE, seed=4))
+    steps = [e for e in rec.events if e["kind"] == "frontend_step"]
+    assert [e["tick"] for e in steps] == list(range(1, fe._tick + 1))
+    assert all(e["dt"] >= 0 and e["t_end"] >= e["t_start"]
+               for e in steps)
+    for i in range(2):
+        local = [e["engine_step"] for e in steps if e["replica"] == i]
+        assert local == list(range(1, fe._steps[i] + 1))

@@ -1,0 +1,181 @@
+"""Load-generator golden tests (PR 10).
+
+Fixed-seed Poisson/bursty/diurnal traces are pinned as goldens
+(arrival instants + the per-request latency summary a frontend run
+produces from them), and virtual-clock monotonicity/determinism
+properties guarantee no wall-clock nondeterminism can leak into
+``BENCH_serving.json``'s ``frontend_bench`` section: every number in a
+:class:`LoadGenerator` report derives from seeded draws and modelled
+round times only.
+"""
+
+import jax
+import pytest
+
+from proptest import cases
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serve import (ARRIVAL_PROCESSES, LoadGenerator,
+                         SchedulerPolicy, ServingFrontend, VirtualClock,
+                         bursty_arrivals, diurnal_arrivals,
+                         make_workload, poisson_arrivals)
+
+pytestmark = pytest.mark.frontend
+
+_PARAMS_CACHE: dict = {}
+
+
+def _frontend(arch: str = "qwen1.5-0.5b"):
+    if arch not in _PARAMS_CACHE:
+        cfg = get_config(arch, "smoke")
+        _PARAMS_CACHE[arch] = (cfg, T.init(jax.random.PRNGKey(0), cfg))
+    cfg, params = _PARAMS_CACHE[arch]
+    return ServingFrontend.build(cfg, params, max_len=32,
+                                 policy=SchedulerPolicy())
+
+
+# --------------------------------------------------------------------------
+# golden arrival traces (pure python, bit-stable by seed)
+# --------------------------------------------------------------------------
+
+_GOLDEN_TRACES = {
+    "poisson": [0.255015071819, 0.261347281579, 0.341753297598,
+                0.404899844016, 0.738298012218, 1.020591264417],
+    "bursty": [0.025501507182, 0.026134728158, 0.034175329760,
+               0.040489984402, 0.073829801222, 0.102059126442],
+    "diurnal": [0.141675039899, 0.186345048799, 0.680911822737,
+                0.757029344876, 0.791295552648, 0.795030886492],
+}
+
+
+@pytest.mark.parametrize("process", sorted(ARRIVAL_PROCESSES))
+def test_arrival_trace_goldens(process):
+    got = ARRIVAL_PROCESSES[process](6, 4.0, seed=42)
+    assert got == pytest.approx(_GOLDEN_TRACES[process], rel=1e-9)
+
+
+def test_bursty_shares_poisson_scale():
+    """The bursty process is the Poisson gaps compressed by the hot
+    rate inside a first burst — the golden shows the 10x on-rate."""
+    assert _GOLDEN_TRACES["bursty"] == pytest.approx(
+        [t / 10.0 for t in _GOLDEN_TRACES["poisson"]], rel=1e-9)
+
+
+@pytest.mark.parametrize("process", sorted(ARRIVAL_PROCESSES))
+def test_long_run_rate(process):
+    """Seeded long traces respect the nominal rate (fixed seed, so a
+    tight band is safe)."""
+    n, rate = 2000, 8.0
+    ts = ARRIVAL_PROCESSES[process](n, rate, seed=1)
+    assert n / ts[-1] == pytest.approx(rate, rel=0.15)
+
+
+@cases(n=25, seed=5)
+def test_arrival_processes_monotone(rng):
+    """Instants are strictly increasing and after t0 for every
+    process, seed, and rate."""
+    seed = rng.randrange(1 << 30)
+    rate = rng.choice([0.5, 4.0, 1e3, 1e6])
+    t0 = rng.choice([0.0, 3.5])
+    for fn in (poisson_arrivals, bursty_arrivals, diurnal_arrivals):
+        ts = fn(20, rate, seed=seed, t0=t0)
+        assert len(ts) == 20 and ts[0] > t0
+        assert all(b > a for a, b in zip(ts, ts[1:]))
+
+
+@cases(n=10, seed=6)
+def test_workload_shapes_seeded(rng):
+    """Request shapes draw from the same seed as the trace: one seed
+    pins both; rids are the arrival order."""
+    seed = rng.randrange(1 << 30)
+    wl = make_workload("poisson", 12, 4.0, seed=seed,
+                       prompt_len=(3, 9), max_new_tokens=(2, 5))
+    wl2 = make_workload("poisson", 12, 4.0, seed=seed,
+                        prompt_len=(3, 9), max_new_tokens=(2, 5))
+    assert [r.rid for _, r in wl] == list(range(12))
+    for (t, a), (t2, b) in zip(wl, wl2):
+        assert t == t2 and (a.prompt == b.prompt).all()
+        assert a.max_new_tokens == b.max_new_tokens
+        assert 3 <= len(a.prompt) <= 9 and 2 <= a.max_new_tokens <= 5
+
+
+# --------------------------------------------------------------------------
+# virtual clock: monotone, never wall
+# --------------------------------------------------------------------------
+
+def test_virtual_clock_monotone():
+    clk = VirtualClock(1.0)
+    assert clk.now() == 1.0
+    assert clk.advance(0.5) == 1.5
+    assert clk.advance_to(1.2) == 1.5      # backwards: no-op
+    assert clk.advance_to(2.0) == 2.0
+    with pytest.raises(ValueError):
+        clk.advance(-1e-9)
+    assert clk.now() == 2.0
+
+
+@cases(n=50, seed=8)
+def test_virtual_clock_monotone_under_random_ops(rng):
+    clk = VirtualClock()
+    prev = clk.now()
+    for _ in range(40):
+        if rng.random() < 0.5:
+            clk.advance(rng.random())
+        else:
+            clk.advance_to(rng.uniform(-1.0, prev + 1.0))
+        assert clk.now() >= prev
+        prev = clk.now()
+
+
+def test_completions_monotone_in_virtual_time():
+    """Per replica, completion instants never decrease and never
+    precede the request's arrival — the monotonicity property that
+    keeps BENCH latency numbers wall-clock-free."""
+    fe = _frontend()
+    gen = LoadGenerator(process="diurnal", n_requests=8, rate=1e6,
+                        seed=3)
+    gen.drive(fe)
+    arrive = {r.rid: t for t, r in gen.workload()}
+    by_replica: dict = {}
+    for rid, t, rep in fe.completions:
+        assert t >= arrive[rid]
+        assert t >= by_replica.get(rep, 0.0)
+        by_replica[rep] = t
+
+
+# --------------------------------------------------------------------------
+# golden latency summary + report determinism
+# --------------------------------------------------------------------------
+
+_GOLDEN_REPORT = {
+    "completed": 6,
+    "p50_s": 1.0307835959760038e-05,
+    "p99_s": 1.2883820582646234e-05,
+    "queue_p50_s": 0.0,
+    "queue_p99_s": 0.0,
+    "goodput_rps": 430749.4915622427,
+    "goodput_tokens_per_s": 1507623.2204678494,
+    "virtual_time_s": 1.3929209708963773e-05,
+    "rejection_rate": 0.0,
+    "queue_depth_max": 1,
+}
+
+
+def test_latency_summary_golden():
+    """A seeded run's per-request latency summary is pinned: the
+    numbers are pure functions of the seed and the round cost model
+    (goodput in the hundreds of thousands rps because virtual seconds
+    are modelled roofline time, not wall time)."""
+    gen = LoadGenerator(process="poisson", n_requests=6, rate=1e6,
+                        seed=42, max_new_tokens=(2, 4))
+    rep = gen.drive(_frontend())
+    for key, want in _GOLDEN_REPORT.items():
+        assert rep[key] == pytest.approx(want, rel=1e-9), key
+
+
+def test_report_deterministic_across_runs():
+    """Two fresh pools, same seed: byte-equal reports (the BENCH
+    determinism contract)."""
+    gen = LoadGenerator(process="bursty", n_requests=8, rate=1e6,
+                        seed=17)
+    assert gen.drive(_frontend()) == gen.drive(_frontend())
